@@ -1,0 +1,51 @@
+"""Shared benchmark machinery: calibrated cost models + schedule evaluation."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config                              # noqa: E402
+from repro.core.cost_model import AnalyticCostModel, V100_AWS     # noqa: E402
+from repro.core.dp import joint_batch_token, optimal_slicing      # noqa: E402
+from repro.core.schedule import SlicingScheme                     # noqa: E402
+from repro.core.simulator import simulate                         # noqa: E402
+from benchmarks.paper_settings import SEQ_LEN, Setting            # noqa: E402
+
+
+def cost_model_for(setting: Setting, batch: int = 1, seq_len: int = SEQ_LEN):
+    cfg = get_config(setting.model)
+    lps = max(1, cfg.n_layers // setting.n_pipe)
+    return AnalyticCostModel(cfg, V100_AWS, layers_per_stage=lps,
+                             batch=batch, tp_degree=setting.n_op,
+                             include_backward=True)
+
+
+def latency_of_scheme(setting: Setting, scheme: SlicingScheme,
+                      seq_len: int = SEQ_LEN, discipline: str = "async"):
+    def t_of(b, l, ctx):
+        return cost_model_for(setting, batch=b, seq_len=seq_len)(l, ctx)
+    return simulate(scheme, setting.n_pipe, t_of, discipline=discipline)
+
+
+def gpipe_scheme(setting: Setting, seq_len: int = SEQ_LEN) -> SlicingScheme:
+    """The paper's w/o-TeraPipe baseline: per-sequence microbatches only
+    ([(1, [L])] * B_replica)."""
+    return SlicingScheme.uniform(seq_len, setting.per_replica_batch,
+                                 microbatch=1)
+
+
+def terapipe_scheme(setting: Setting, seq_len: int = SEQ_LEN,
+                    granularity: int = 8) -> SlicingScheme:
+    """Joint batch×token DP (paper §3.4) with per-sequence batch splits."""
+    B = setting.per_replica_batch
+
+    def per_b(b):
+        return cost_model_for(setting, batch=b, seq_len=seq_len)
+
+    res = joint_batch_token(per_b, seq_len, B, setting.n_pipe,
+                            granularity=granularity, eps=1e-4,
+                            batch_candidates=sorted(
+                                {1, 2, 4, 8, B} & set(range(1, B + 1))))
+    return SlicingScheme.from_dp(seq_len, B, res.scheme)

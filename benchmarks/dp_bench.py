@@ -1,0 +1,15 @@
+"""DP scheduler runtime benchmark (the paper: 'finishes within a minute')."""
+import time
+
+from benchmarks.common import terapipe_scheme
+from benchmarks.paper_settings import TABLE1
+
+
+def run(emit):
+    for idx in (5, 8, 9):
+        s = next(t for t in TABLE1 if t.idx == idx)
+        t0 = time.perf_counter()
+        scheme = terapipe_scheme(s)
+        dt = time.perf_counter() - t0
+        emit(f"dp/setting{idx}_{s.model}", dt * 1e6,
+             f"ticks={scheme.n_ticks}")

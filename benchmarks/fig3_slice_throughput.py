@@ -1,0 +1,38 @@
+"""Paper Figure 3: forward time / throughput of a single layer vs slice
+length — the occupancy-floor phenomenon that motivates the DP, plus a REAL
+CPU measurement of the same curve shape on the smoke model."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.cost_model import AnalyticCostModel, V100_AWS
+from repro.models import build_model
+from repro.models.layers import dense_block_full
+
+
+def run(emit):
+    # analytic curve (V100, GPT3-1B single layer, as in the paper's figure)
+    cm = AnalyticCostModel(get_config("gpt3-1b"), V100_AWS,
+                           layers_per_stage=1, include_backward=False)
+    for l in (1, 16, 64, 256, 512, 1024, 2048):
+        t = cm(l, 0)
+        emit(f"fig3/model_len{l}", t * 1e6, f"tok_per_ms={l / (t * 1e3):.1f}")
+
+    # measured on CPU (smoke layer): same flat-then-linear shape
+    cfg = get_config("phi3-mini-3.8b", smoke=True).replace(remat=False)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    bp = jax.tree.map(lambda a: a[0], params["groups"]["blocks"])
+    fn = jax.jit(lambda x: dense_block_full(bp, cfg, x))
+    for l in (1, 8, 32, 128, 512):
+        x = jnp.ones((1, l, cfg.d_model), jnp.float32)
+        fn(x).block_until_ready()
+        n = 30
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn(x).block_until_ready()
+        dt = (time.perf_counter() - t0) / n
+        emit(f"fig3/cpu_measured_len{l}", dt * 1e6,
+             f"tok_per_ms={l / (dt * 1e3):.1f}")

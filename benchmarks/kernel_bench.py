@@ -1,0 +1,37 @@
+"""Kernel microbenchmarks: measured wall time of the pure-jnp TeraPipe
+attention paths on this container (CPU), sweeping (l, ctx) — the empirical
+t_fwd(l, ctx) table the DP can consume via TableCostModel.
+
+(The Pallas kernel itself only runs in interpret mode here; its TPU tiling is
+validated for correctness in tests and analysed via the dry-run roofline.)"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import terapipe_attention_ref
+
+
+def _time(fn, *args, n=10):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / n
+
+
+def run(emit):
+    jfn = jax.jit(lambda q, k, v, c: terapipe_attention_ref(q, k, v, c),
+                  static_argnums=3)
+    rng = jax.random.PRNGKey(0)
+    for l, ctx in [(128, 0), (128, 512), (128, 1920),
+                   (512, 0), (512, 1536), (1024, 1024)]:
+        q = jax.random.normal(rng, (1, l, 8, 64), jnp.float32)
+        k = jax.random.normal(rng, (1, ctx + l, 8, 64), jnp.float32)
+        v = jax.random.normal(rng, (1, ctx + l, 8, 64), jnp.float32)
+        dt = _time(jfn, q, k, v, ctx)
+        flops = 4 * l * (ctx + l / 2) * 8 * 64
+        emit(f"kernel/ref_l{l}_ctx{ctx}", dt * 1e6,
+             f"gflops={flops / dt / 1e9:.1f}")

@@ -1,0 +1,36 @@
+"""The paper's Table 1 evaluation settings (verbatim)."""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Setting:
+    idx: int
+    model: str
+    n_gpus: int
+    batch: int              # B
+    n_data: int             # data-parallel shards
+    n_pipe: int             # pipeline stages K
+    n_op: int               # Megatron op-partitioning degree
+    paper_latency_wo: float  # w/o TeraPipe (s), Table 2
+    paper_latency_w: float   # w/ TeraPipe (s), Table 2
+
+    @property
+    def per_replica_batch(self) -> int:
+        return self.batch // self.n_data
+
+
+TABLE1 = [
+    Setting(1, "gpt3-1b", 192, 128, 8, 24, 1, 1.517, 1.254),
+    Setting(2, "gpt3-1b", 192, 72, 2, 12, 8, 1.018, 1.018),
+    Setting(3, "gpt3-1b", 192, 72, 1, 24, 8, 0.913, 0.913),
+    Setting(4, "gpt3-13b", 320, 32, 2, 20, 8, 2.637, 1.891),
+    Setting(5, "gpt3-13b", 320, 32, 1, 40, 8, 1.863, 1.328),
+    Setting(6, "gpt3-44b", 384, 8, 4, 96, 1, 13.319, 7.103),
+    Setting(7, "gpt3-44b", 384, 8, 2, 24, 8, 4.311, 2.771),
+    Setting(8, "gpt3-44b", 384, 8, 1, 48, 8, 2.662, 1.111),
+    Setting(9, "gpt3-175b", 384, 2, 1, 96, 4, 9.990, 1.481),
+    Setting(10, "gpt3-175b", 384, 2, 1, 48, 8, 5.822, 1.160),
+]
+
+SEQ_LEN = 2048

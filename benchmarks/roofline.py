@@ -1,0 +1,64 @@
+"""Assemble the roofline table from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+                                                 [--markdown]
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def load(dir_: str):
+    recs = []
+    for p in sorted(Path(dir_).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_row(r):
+    if r.get("skipped"):
+        return None
+    if not r.get("ok"):
+        return f"| {r['arch']} | {r['shape']} | {r['mode']} | FAILED | | | | | |"
+    ro = r["roofline"]
+    tc, tm, tl = ro["t_compute"], ro["t_memory"], ro["t_collective"]
+    dom = ro["bottleneck"]
+    t_bound = max(tc, tm, tl)
+    frac = tc / t_bound if t_bound else 0.0
+    ur = ro.get("useful_ratio")
+    am = r.get("analytic_memory", {}).get("total", 0) / 2**30
+    return (f"| {r['arch']} | {r['shape']} | {'pod2' if r['multi_pod'] else 'pod1'}"
+            f" | {tc*1e3:.2f} | {tm*1e3:.2f} | {tl*1e3:.2f} | {dom}"
+            f" | {frac:.2f} | {ur:.2f} | {am:.1f} |" if ur is not None else "")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mode", default="gspmd")
+    args = ap.parse_args()
+
+    recs = [r for r in load(args.dir) if r.get("mode", "gspmd") == args.mode]
+    print("| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+          "| bottleneck | roofline-frac | useful-FLOPs | est-mem (GiB/dev) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_fail = 0
+    for r in recs:
+        if r.get("skipped"):
+            n_skip += 1
+            continue
+        if not r.get("ok"):
+            n_fail += 1
+        else:
+            n_ok += 1
+        row = fmt_row(r)
+        if row:
+            print(row)
+    print(f"\n{n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

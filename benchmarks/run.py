@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+    PYTHONPATH=src python -m benchmarks.run [--only table2]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+SUITES = ["table2_main", "table3_dp_ablation", "table4_seqlen",
+          "fig3_slice_throughput", "dp_bench", "kernel_bench", "train_bench"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    def emit(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    import importlib
+    for suite in SUITES:
+        if args.only and args.only not in suite:
+            continue
+        mod = importlib.import_module(f"benchmarks.{suite}")
+        mod.run(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Paper Table 2 / Figure 5: per-iteration latency for all 10 settings,
+with and without TeraPipe, on the calibrated V100 cost model."""
+from benchmarks.common import (gpipe_scheme, latency_of_scheme,
+                               terapipe_scheme)
+from benchmarks.paper_settings import TABLE1
+
+
+def run(emit):
+    for s in TABLE1:
+        base = latency_of_scheme(s, gpipe_scheme(s))
+        tp_scheme = terapipe_scheme(s)
+        tp = latency_of_scheme(s, tp_scheme)
+        speedup = base / tp
+        paper_speedup = s.paper_latency_wo / s.paper_latency_w
+        emit(f"table2/setting{s.idx}_{s.model}_wo", base * 1e6,
+             f"paper={s.paper_latency_wo:.3f}s")
+        emit(f"table2/setting{s.idx}_{s.model}_w", tp * 1e6,
+             f"speedup={speedup:.2f}x_paper={paper_speedup:.2f}x_"
+             f"scheme={tp_scheme.describe()[:60]}")

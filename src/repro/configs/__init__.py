@@ -1,0 +1,118 @@
+"""Architecture registry + assigned input shapes.
+
+Every assigned architecture lives in its own module exposing ``FULL`` (the
+exact published config) and ``SMOKE`` (a reduced same-family config for CPU
+tests).  ``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for
+the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+ARCHS = [
+    "phi3-mini-3.8b",
+    "qwen3-0.6b",
+    "phi4-mini-3.8b",
+    "stablelm-12b",
+    "whisper-medium",
+    "qwen3-moe-235b-a22b",
+    "deepseek-moe-16b",
+    "mamba2-2.7b",
+    "recurrentgemma-9b",
+    "phi-3-vision-4.2b",
+]
+
+# paper's own models (GPT-3 family, Table 1)
+PAPER_ARCHS = ["gpt3-1b", "gpt3-13b", "gpt3-44b", "gpt3-175b"]
+
+_MODULES = {
+    "phi3-mini-3.8b": "phi3_mini",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "phi4-mini-3.8b": "phi4_mini",
+    "stablelm-12b": "stablelm_12b",
+    "whisper-medium": "whisper_medium",
+    "qwen3-moe-235b-a22b": "qwen3_moe",
+    "deepseek-moe-16b": "deepseek_moe",
+    "mamba2-2.7b": "mamba2",
+    "recurrentgemma-9b": "recurrentgemma",
+    "phi-3-vision-4.2b": "phi3_vision",
+    "gpt3-1b": "gpt3",
+    "gpt3-13b": "gpt3",
+    "gpt3-44b": "gpt3",
+    "gpt3-175b": "gpt3",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    if arch.startswith("gpt3"):
+        table = mod.SMOKE if smoke else mod.FULL
+        return table[arch]
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    """Cells excluded from the dry-run grid, per the assignment rules."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return ("pure full-attention arch: 524k dense decode KV cache exceeds any "
+                "HBM budget; shape reserved for sub-quadratic families (DESIGN.md §5)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    train  -> kwargs for train_step(params, opt_state, batch)
+    prefill-> kwargs for prefill(params, batch)
+    decode -> kwargs for decode_step(params, caches, batch, pos)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            t = S - cfg.n_patches
+            return {"tokens": sds((B, t), i32), "labels": sds((B, t), i32),
+                    "patch_embeds": sds((B, cfg.n_patches, cfg.d_model), bf16)}
+        if cfg.family == "encdec":
+            return {"frames": sds((B, S, cfg.d_model), bf16),
+                    "tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch = {"tokens": sds((B, S - cfg.n_patches), i32),
+                     "patch_embeds": sds((B, cfg.n_patches, cfg.d_model), bf16)}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, S, cfg.d_model), bf16)
+        return batch
+
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((B, 1), i32)}

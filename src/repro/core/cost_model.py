@@ -1,0 +1,179 @@
+"""Cost models for the TeraPipe DP scheduler.
+
+The DP needs t_fwd(l, ctx): forward (or fwd+bwd) latency of ONE pipeline
+stage processing a token slice of length ``l`` whose attention context is
+``ctx`` previously-processed tokens (Eq. 4 of the paper).
+
+Three interchangeable models:
+
+* :class:`AnalyticCostModel` — roofline-style FLOPs/bandwidth model with an
+  occupancy floor (the flat region of the paper's Fig. 3: below a minimum
+  slice length the device is latency-bound, not throughput-bound).  This is
+  how we parameterize for hardware we cannot measure (TPU v5e target) and
+  how we calibrate the paper's V100 setting.
+* :class:`TableCostModel` — measured (l, ctx) -> seconds table (what the
+  paper uses on a live cluster).
+* :class:`BilinearFitCostModel` — the paper's estimator (Eq. 9):
+  t_fwd(i, j) = t_base(i) + a0 + a1·i + a2·j + a3·i·j, least-squares fit on
+  a sample of (i, j) pairs from any ground-truth model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Hardware specifications
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float          # FLOP/s (bf16/fp16 tensor)
+    hbm_bw: float              # bytes/s
+    link_bw: float             # bytes/s stage-to-stage (ICI link / x-node net)
+    link_latency: float        # seconds per transfer
+    occupancy_floor: int       # tokens: below this, time is flat (Fig. 3)
+    efficiency: float          # achievable fraction of peak on large matmuls
+
+
+TPU_V5E = HardwareSpec("tpu-v5e", 197e12, 819e9, 50e9, 1e-6, 256, 0.55)
+# AWS p3.16xlarge: V100 (125 TF/s fp16), 25 Gbit/s x-node => ~3 GB/s usable
+V100_AWS = HardwareSpec("v100-aws", 125e12, 900e9, 3e9, 20e-6, 256, 0.45)
+
+
+# ---------------------------------------------------------------------------
+# FLOPs accounting (per layer, per token)
+# ---------------------------------------------------------------------------
+def layer_matmul_flops(cfg: ModelConfig) -> float:
+    """Context-independent matmul FLOPs per token per layer (fwd)."""
+    d, hd = cfg.d_model, cfg.hd
+    qo = 2 * d * cfg.n_heads * hd * 2          # wq + wo
+    kv = 2 * d * cfg.n_kv_heads * hd * 2       # wk + wv
+    if cfg.family == "moe" or cfg.n_experts:
+        ff = 2 * d * cfg.d_expert * 3 * cfg.moe_top_k
+        ff += 2 * d * (cfg.n_shared_experts * cfg.d_expert) * 3
+        ff += 2 * d * cfg.n_experts            # router
+    elif cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_head_dim
+        proj = 2 * d * (2 * d_inner + 2 * cfg.ssm_state + h)
+        out = 2 * d_inner * d
+        ssd = 2 * d_inner * cfg.ssm_state * 4  # B x̄, C S terms (state flops)
+        return proj + out + ssd
+    elif cfg.family == "hybrid":
+        # average over pattern: 2 rec blocks + 1 local-attn block per 3
+        rec = 2 * d * d * 5 + 2 * d * d        # w_x,w_y,w_a,w_i,w_out (+conv~small)
+        att = qo + kv + 2 * d * cfg.d_ff * 3
+        return (2 * rec + att) / 3.0
+    else:
+        ff = 2 * d * cfg.d_ff * 3              # SwiGLU: gate, up, down
+    return qo + kv + ff
+
+
+def attention_context_flops(cfg: ModelConfig, l: int, ctx: int) -> float:
+    """Attention score+value FLOPs for a slice of l tokens at context ctx."""
+    if cfg.family == "ssm":
+        return 0.0
+    d_attn = cfg.n_heads * cfg.hd
+    eff_ctx = ctx
+    avg_span = eff_ctx + (l + 1) / 2.0
+    if cfg.window:
+        avg_span = min(avg_span, float(cfg.window))
+    per_layer = 4.0 * d_attn * l * avg_span     # QK^T + PV, fwd
+    if cfg.family == "hybrid":
+        per_layer /= len(cfg.block_pattern)     # only 1/3 of layers attend
+    return per_layer
+
+
+# ---------------------------------------------------------------------------
+# Cost model interface
+# ---------------------------------------------------------------------------
+class CostModel:
+    """t(l, ctx) in seconds for one stage; batch b sequences per slice."""
+
+    def t_fwd(self, l: int, ctx: int) -> float:
+        raise NotImplementedError
+
+    def __call__(self, l: int, ctx: int) -> float:
+        return self.t_fwd(l, ctx)
+
+
+class AnalyticCostModel(CostModel):
+    def __init__(self, cfg: ModelConfig, hw: HardwareSpec, *,
+                 layers_per_stage: int, batch: int = 1, tp_degree: int = 1,
+                 include_backward: bool = True, stage_slowdown: float = 1.0):
+        self.cfg, self.hw = cfg, hw
+        self.layers = layers_per_stage
+        self.batch = batch
+        self.tp = tp_degree
+        self.bwd_mult = 3.0 if include_backward else 1.0   # bwd ≈ 2x fwd
+        self.slowdown = stage_slowdown
+        self._matmul_per_tok = layer_matmul_flops(cfg) * layers_per_stage
+
+    def t_fwd(self, l: int, ctx: int) -> float:
+        hw = self.hw
+        l_eff = max(l, hw.occupancy_floor)     # Fig. 3 flat region
+        flops = self.batch * l_eff * self._matmul_per_tok
+        flops += self.batch * attention_context_flops(self.cfg, l_eff, ctx) * self.layers
+        t_compute = flops * self.bwd_mult / (self.tp * hw.peak_flops * hw.efficiency)
+        # stage boundary transfer: activations of the slice (bf16)
+        bytes_x = self.batch * l * self.cfg.d_model * 2
+        t_comm = hw.link_latency + bytes_x / hw.link_bw
+        return self.slowdown * (t_compute + t_comm)
+
+
+class TableCostModel(CostModel):
+    def __init__(self, table: Dict[Tuple[int, int], float],
+                 granularity: int = 1):
+        self.table = dict(table)
+        self.g = granularity
+
+    def t_fwd(self, l: int, ctx: int) -> float:
+        key = (self.g * int(round(l / self.g)), self.g * int(round(ctx / self.g)))
+        return self.table[key]
+
+
+class BilinearFitCostModel(CostModel):
+    """The paper's Eq. 9 estimator.
+
+    t(i, j) = t_base(i) + a0 + a1 i + a2 j + a3 i j, where t_base(i) = t(i, 0)
+    is measured for every i and the context overhead is a bilinear fit on a
+    subset of (i, j) samples.
+    """
+
+    def __init__(self, t_base: Callable[[int], float], coeffs: np.ndarray):
+        self.t_base = t_base
+        self.a = np.asarray(coeffs, dtype=np.float64)
+
+    @classmethod
+    def fit(cls, truth: CostModel, L: int, *, n_samples: int = 256,
+            seed: int = 0) -> "BilinearFitCostModel":
+        rng = np.random.default_rng(seed)
+        ii = rng.integers(1, L + 1, n_samples)
+        jj = rng.integers(0, L, n_samples)
+        y = np.array([truth(int(i), int(j)) - truth(int(i), 0)
+                      for i, j in zip(ii, jj)])
+        X = np.stack([np.ones_like(ii), ii, jj, ii * jj], axis=1).astype(np.float64)
+        coeffs, *_ = np.linalg.lstsq(X, y, rcond=None)
+        base = {i: truth(i, 0) for i in range(1, L + 1)}
+        return cls(lambda i: base[i], coeffs)
+
+    def t_fwd(self, l: int, ctx: int) -> float:
+        a0, a1, a2, a3 = self.a
+        return self.t_base(l) + a0 + a1 * l + a2 * ctx + a3 * l * ctx
+
+    def relative_error(self, truth: CostModel, L: int, n: int = 512,
+                       seed: int = 1) -> float:
+        rng = np.random.default_rng(seed)
+        errs = []
+        for _ in range(n):
+            i = int(rng.integers(1, L + 1))
+            j = int(rng.integers(0, L))
+            t_true, t_est = truth(i, j), self.t_fwd(i, j)
+            errs.append(abs(t_est - t_true) / max(t_true, 1e-12))
+        return float(np.mean(errs))

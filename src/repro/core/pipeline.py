@@ -1,0 +1,319 @@
+"""TeraPipe: token-level pipeline parallelism as a shard_map program.
+
+The paper's execution model (§3.2), adapted TPU-native (DESIGN.md §3):
+
+* The layer stack is partitioned into K cells; cell k lives on pipeline rank
+  k of the ``pipe`` mesh axis.
+* A minibatch is cut into D microbatches × M token slices; work item
+  i = d·M + m enters stage 0 at tick i and flows down the pipe, one
+  ``collective-permute`` per tick.
+* Each stage keeps a per-layer KV cache (or SSM/LRU state) of the prefix of
+  the *current* microbatch it has already processed — the paper's attention
+  context t_fwd(l, ctx).
+* Stages run in SPMD lockstep: a tick is one program region bounded by the
+  ppermute.  The whole (fwd ticks → loss → bwd ticks) program is a single
+  differentiable function; the reverse pipeline emerges from autodiff (the
+  transpose of ppermute is the reverse ppermute).
+
+Within a stage, optional Megatron-style tensor parallelism over a ``tp``
+mesh axis: weights arrive head/ff/expert-sharded and the block fns psum
+partial outputs (see models/* with cfg.tp_axis).
+
+GPipe (the paper's baseline) is the D>1, M=1 special case.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Model, build_model
+from repro.models.common import ModelConfig
+from repro.models.lm import _scan_full
+
+# logical axis -> pipeline mesh axis mapping for TP-sharded stage weights
+_TP_LOGICAL = ("heads", "ff", "experts")
+
+
+@dataclasses.dataclass
+class TeraPipeConfig:
+    n_token_slices: int = 4          # M (uniform mode; ignored if slice_lens)
+    # non-uniform DP scheme (the paper's Alg. 1 output): static slice lengths
+    # summing to seq_len.  Executed with l_max-padded buffers; garbage tail
+    # positions of short slices are overwritten in the KV cache by the next
+    # slice before ever being read, and discarded at reassembly (DESIGN §3).
+    # Attention-family archs only (state-based families need uniform slices).
+    slice_lens: Optional[Tuple[int, ...]] = None
+    n_microbatches: int = 1          # D
+    pipe_axis: str = "pipe"
+    tp_axis: Optional[str] = None    # None => no TP within a stage
+    data_axes: Tuple[str, ...] = ("data",)
+    cache_dtype: Any = jnp.bfloat16
+    # bubble ticks (stage idle in the fill/drain phases) skip the stage
+    # compute via lax.cond — at runtime an idle device runs the cheap branch
+    # instead of masked garbage compute.  Disable only for debugging.
+    skip_bubbles: bool = True
+
+
+def _group_split(model: Model):
+    """(pre_groups, main_group, post_groups) — only the (single, homogeneous)
+    main group is pipelined; small pre/post groups run under plain GSPMD
+    around the pipeline (DESIGN.md §3)."""
+    gs = model.groups
+    if model.cfg.family == "encdec":
+        raise NotImplementedError(
+            "enc-dec archs: the bidirectional encoder is not token-sliceable "
+            "(paper footnote 1); pipeline the decoder via the generic path or "
+            "use GSPMD mode")
+    if len(gs) == 1:
+        return [], gs[0], []
+    if model.cfg.family == "moe":        # [dense0?, moe]
+        return list(gs[:-1]), gs[-1], []
+    if model.cfg.family == "hybrid":     # [super, tail?]
+        return [], gs[0], list(gs[1:])
+    raise NotImplementedError(model.cfg.family)
+
+
+def _leaf_pspec(spec: Tuple, tp_axis, tp_size: int, pipe_axis, cfg: ModelConfig):
+    """PartitionSpec for one stacked main-group param leaf.
+
+    spec[0] is the layer axis (-> pipe); 'heads'/'ff'/'experts' -> tp;
+    'kv_heads' -> tp only if divisible; everything else replicated.
+    """
+    out = [pipe_axis]
+    for ax in spec[1:]:
+        if tp_axis and tp_size > 1 and ax in _TP_LOGICAL:
+            out.append(tp_axis)
+        elif (tp_axis and tp_size > 1 and ax == "kv_heads"
+              and cfg.n_kv_heads % tp_size == 0):
+            out.append(tp_axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
+                       seq_len: int, global_batch: int):
+    """Returns loss_fn(params, batch) implementing the pipelined step, plus
+    the param sharding tree (NamedShardings) for jit in_shardings."""
+    cfg = model.cfg
+    K = mesh.shape[tcfg.pipe_axis]
+    tp = mesh.shape[tcfg.tp_axis] if tcfg.tp_axis else 1
+    data = 1
+    for a in tcfg.data_axes:
+        data *= mesh.shape[a]
+    D = tcfg.n_microbatches
+    L, B = seq_len, global_batch
+    if tcfg.slice_lens is not None:
+        slice_lens = tuple(tcfg.slice_lens)
+        assert sum(slice_lens) == L, (slice_lens, L)
+        M = len(slice_lens)
+        l = max(slice_lens)                      # padded slice buffer length
+        uniform = all(s == l for s in slice_lens)
+        if not uniform:
+            assert model.cfg.family in ("dense", "vlm", "moe"), \
+                "non-uniform slices need prefix-overwrite semantics (KV " \
+                "caches); state-based families require uniform slices"
+        starts = [0]
+        for s in slice_lens[:-1]:
+            starts.append(starts[-1] + s)
+    else:
+        M = tcfg.n_token_slices
+        assert L % M == 0, (L, M)
+        l = L // M
+        slice_lens = tuple([l] * M)
+        starts = [i * l for i in range(M)]
+    assert B % (data * D) == 0, (B, data, D)
+    mb_local = B // (data * D)
+    b_local = B // data
+    d_model = cfg.d_model
+
+    pre, main, post = _group_split(model)
+    n_main = main.count
+    bps = -(-n_main // K)                      # blocks per stage (ceil)
+    n_pad = K * bps - n_main
+
+    # local-config model: block fns see TP-local head counts inside shard_map
+    if tp > 1:
+        assert cfg.n_heads % tp == 0, (cfg.n_heads, tp)
+        kv_local = (cfg.n_kv_heads // tp if cfg.n_kv_heads % tp == 0
+                    else cfg.n_kv_heads)
+        cfg_local = cfg.replace(tp_axis=tcfg.tp_axis,
+                                head_dim=cfg.hd,      # pin: hd derives from
+                                n_heads=cfg.n_heads // tp,  # n_heads otherwise
+                                n_kv_heads=kv_local)
+    else:
+        cfg_local = cfg
+    model_local = build_model(cfg_local)
+    main_local = next(g for g in model_local.groups if g.name == main.name)
+    block_fn = main_local.sliced_dyn or main_local.sliced
+
+    main_spec_tree = specs["groups"][main.name]
+    is_spec = lambda s: isinstance(s, tuple)
+    stage_in_specs = jax.tree.map(
+        lambda s: _leaf_pspec(s, tcfg.tp_axis, tp, tcfg.pipe_axis, cfg),
+        main_spec_tree, is_leaf=is_spec)
+
+    # batch activations: sharded over data axes, replicated over pipe/tp
+    x_spec = P(tcfg.data_axes, None, None)
+    DM = D * M
+    ticks = DM + K - 1
+
+    # ---- the SPMD pipeline body (per-device program) ----
+    uniform_slices = all(s == l for s in slice_lens)
+    starts_arr_host = starts
+    # padded caches: a short slice's garbage tail may write up to l beyond
+    # its ctx; pad the cache so the LAST slice's tail never wraps onto valid
+    # entries (overwritten-before-read invariant, DESIGN §3)
+    cache_len = L if uniform_slices else L + l
+
+    def pipeline_body(stage_params, x_emb):
+        k_rank = jax.lax.axis_index(tcfg.pipe_axis)
+        starts_arr = jnp.asarray(starts_arr_host, jnp.int32)
+        # per-layer cache struct (from the local model), re-led with bps
+        cache_struct = jax.eval_shape(
+            lambda: main_local.init_cache(mb_local, cache_len, tcfg.cache_dtype))
+        caches = jax.tree.map(
+            lambda a: jnp.zeros((bps,) + a.shape[1:], a.dtype), cache_struct)
+
+        def stage_apply(x, caches, ctx):
+            def body(h, inp):
+                bp_l, c_l = inp
+                h, c_l = block_fn(bp_l, h, c_l, ctx)
+                return h, c_l
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, caches = jax.lax.scan(body_fn, x, (stage_params, caches))
+            return x, caches
+
+        x_prev = jnp.zeros((mb_local, l, d_model), cfg.dtype)
+        outbuf = jnp.zeros((DM, mb_local, l, d_model), cfg.dtype)
+        for t in range(ticks):
+            i = t - k_rank                                   # work item id
+            valid = (i >= 0) & (i < DM)
+            i_c = jnp.clip(i, 0, DM - 1)
+            mb_idx, sl_idx = i_c // M, i_c % M
+            ctx = jnp.take(starts_arr, sl_idx) if not uniform_slices \
+                else sl_idx * l
+            x0 = jax.lax.dynamic_slice(
+                x_emb, (mb_idx * mb_local, ctx, 0), (mb_local, l, d_model))
+            x_in = jnp.where(k_rank == 0, x0, x_prev)
+            # new microbatch => fresh prefix: zero the caches.  Required for
+            # state-based families (SSM/LRU carry real state); harmless and
+            # exact for KV caches (masked by absolute positions anyway).
+            fresh = sl_idx == 0
+            caches = jax.tree.map(
+                lambda c: jnp.where(jnp.reshape(fresh, (1,) * c.ndim),
+                                    jnp.zeros_like(c), c), caches)
+            if tcfg.skip_bubbles:
+                # idle (fill/drain) ticks take the cheap branch at runtime
+                x_out, caches = jax.lax.cond(
+                    valid,
+                    lambda xi, cs: stage_apply(xi, cs, ctx),
+                    lambda xi, cs: (xi, cs),
+                    x_in, caches)
+            else:
+                x_out, caches_new = stage_apply(x_in, caches, ctx)
+                caches = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        jnp.reshape(valid, (1,) * new.ndim), new, old),
+                    caches_new, caches)
+            # always-write (clamped): only the last stage's buffer is read,
+            # and for it every valid item overwrites any earlier garbage
+            outbuf = jax.lax.dynamic_update_slice(
+                outbuf, x_out[None], (i_c, 0, 0, 0))
+            x_prev = jax.lax.ppermute(
+                x_out, tcfg.pipe_axis, [(j, (j + 1) % K) for j in range(K)])
+        return outbuf
+
+    out_specs = P(tcfg.pipe_axis, tcfg.data_axes, None, None)
+    shmap = jax.shard_map(
+        pipeline_body, mesh=mesh,
+        in_specs=(stage_in_specs, x_spec),
+        out_specs=out_specs, check_vma=False)
+
+    def loss_fn(params, batch):
+        x = model.embed(params, batch, 0)
+        for g in pre:
+            x = _scan_full(g, params["groups"][g.name], x, cfg.remat)
+        x = x.astype(cfg.dtype)
+        if not uniform_slices:
+            # pad the seq dim so a short slice's l_max-window never clamps
+            # (dynamic_slice clamps OOB starts, which would alias real data)
+            x = jnp.pad(x, ((0, 0), (0, l), (0, 0)))
+
+        stage_params = params["groups"][main.name]
+        if n_pad:
+            # zero blocks are exact identities (residual blocks, see DESIGN);
+            # constrain the result straight to the pipe-sharded layout so the
+            # concat does not bounce through a replicated intermediate
+            stage_params = jax.tree.map(
+                lambda a, sp: jax.lax.with_sharding_constraint(
+                    jnp.concatenate(
+                        [a, jnp.zeros((n_pad,) + a.shape[1:], a.dtype)]),
+                    NamedSharding(mesh, sp)),
+                stage_params, stage_in_specs)
+
+        out = shmap(stage_params, x)
+        out_last = jax.lax.slice_in_dim(out, (K - 1) * DM, K * DM, axis=0)
+        # (D*M, B/D, l, d) -> (B, L, d); batch order is (shard, mb, row).
+        # The slice inherits a pipe-sharding on axis 0 that the reshape cannot
+        # keep — move it to batch-sharded explicitly first.
+        out_last = jax.lax.with_sharding_constraint(
+            out_last, NamedSharding(mesh, P(None, tcfg.data_axes, None, None)))
+        if all(s == l for s in slice_lens):
+            o = out_last.reshape(D, M, data, mb_local, l, d_model)
+            o = jnp.transpose(o, (2, 0, 3, 1, 4, 5))
+            x_final = o.reshape(B, L, d_model)
+        else:
+            # non-uniform: drop each slice's padded tail (static slicing)
+            o = out_last.reshape(D, M, data, mb_local, l, d_model)
+            segs = [o[:, i, :, :, :slice_lens[i], :] for i in range(M)]
+            o = jnp.concatenate(segs, axis=3)         # (D, data, mb, L, d)
+            o = jnp.transpose(o, (1, 0, 2, 3, 4))
+            x_final = o.reshape(B, L, d_model)
+        x_final = jax.lax.with_sharding_constraint(
+            x_final, NamedSharding(mesh, P(tcfg.data_axes, None, None)))
+
+        for g in post:
+            x_final = _scan_full(g, params["groups"][g.name], x_final, cfg.remat)
+        return model.head_loss(params, x_final, batch["labels"])
+
+    def param_shardings(params_tree_specs):
+        """NamedSharding tree for jit in_shardings (stage params pipe-sharded,
+        everything else replicated/TP per logical spec)."""
+        def one(path_spec):
+            return NamedSharding(mesh, P())
+        # main group: pipe on layer axis (+tp); others replicated
+        def build(spec, in_main):
+            if in_main:
+                return NamedSharding(
+                    mesh, _leaf_pspec(spec, tcfg.tp_axis, tp, tcfg.pipe_axis, cfg))
+            return NamedSharding(mesh, P())
+        out = {}
+        for key, sub in params_tree_specs.items():
+            if key == "groups":
+                out["groups"] = {
+                    gname: jax.tree.map(lambda s: build(s, gname == main.name),
+                                        gspec, is_leaf=is_spec)
+                    for gname, gspec in sub.items()}
+            else:
+                out[key] = jax.tree.map(lambda s: NamedSharding(mesh, P()),
+                                        sub, is_leaf=is_spec)
+        return out
+
+    return loss_fn, param_shardings
+
+
+def make_gpipe_loss(model: Model, specs, mesh: Mesh, *, n_microbatches: int,
+                    pipe_axis="pipe", tp_axis=None, data_axes=("data",),
+                    seq_len: int, global_batch: int):
+    """Microbatch-only pipelining (GPipe, the paper's baseline): D micro-
+    batches, a single token slice per sequence."""
+    tcfg = TeraPipeConfig(n_token_slices=1, n_microbatches=n_microbatches,
+                          pipe_axis=pipe_axis, tp_axis=tp_axis,
+                          data_axes=tuple(data_axes))
+    return make_terapipe_loss(model, specs, mesh, tcfg, seq_len, global_batch)

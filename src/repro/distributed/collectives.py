@@ -1,0 +1,61 @@
+"""Gradient compression for cross-pod data-parallel sync.
+
+At 2+ pods the DP all-reduce crosses the (slow) inter-pod links; compressing
+gradients there is a standard large-scale trick (DESIGN.md §6):
+
+* ``bf16_allreduce_cast``: cast fp32 grads to bf16 before the psum XLA will
+  emit for the DP reduction (2x bytes saved, no state).
+* ``Int8ErrorFeedback``: symmetric per-tensor int8 quantization with error
+  feedback (the residual is added back next step, so the compression error
+  does not accumulate — Karimireddy et al. 2019).  4x bytes saved.
+
+These transform the gradient pytree; the actual reduction stays whatever the
+surrounding pjit chooses (so they compose with any sharding).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_compress(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def bf16_decompress(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+class EFState(NamedTuple):
+    residual: Any              # fp32 pytree
+
+
+def int8_ef_init(params: Any) -> EFState:
+    return EFState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_ef_compress(grads: Any, state: EFState) -> Tuple[Any, Any, EFState]:
+    """Returns (quantized int8 tree, scales tree, new state)."""
+    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, state.residual)
+    qs = jax.tree.map(_quantize, corrected)
+    q = jax.tree.map(lambda t: t[0], qs,
+                     is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+    scales = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+    residual = jax.tree.map(
+        lambda c, qq, s: c - qq.astype(jnp.float32) * s, corrected, q, scales)
+    return q, scales, EFState(residual)
+
+
+def int8_ef_decompress(q: Any, scales: Any) -> Any:
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)

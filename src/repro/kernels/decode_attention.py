@@ -1,0 +1,105 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+The serving hot spot (decode_32k / long_500k cells): q (B, 1, Hq, hd) against
+a cache (B, L, Hkv, hd) valid up to ``kv_len``.  Decode is memory-bound — the
+win is (a) GQA handled by BlockSpec index mapping (kv head = q head // rep),
+so the repeated K/V are NEVER materialized in HBM, and (b) a single streaming
+pass over the cache with running softmax in VMEM scratch.
+
+Grid (B, Hq, L/blk_kv), KV block innermost (TPU grids are sequential
+minor-to-major so the scratch accumulator persists across the KV sweep).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_KV = 512
+NEG_INF = float("-inf")
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, s_scr,
+                   acc_scr, *, blk_kv: int, scale: float):
+    ikv = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+    kv_len = kvlen_ref[0]
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ikv * blk_kv < kv_len)
+    def _compute():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32)              # (hd,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (blk_kv, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = (k @ q) * scale                               # (blk_kv,)
+        kv_pos = ikv * blk_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_kv,), 0)
+        logits = jnp.where(kv_pos < kv_len, logits, NEG_INF)
+        logits2 = logits[None, :]                              # (1, blk_kv)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits2, axis=-1, keepdims=True))
+        p = jnp.exp(logits2 - m_new)
+        p = jnp.where(kv_pos[None, :] < kv_len, p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        s_scr[...] = s_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(s_scr[...], 1e-30)
+        o_ref[0, 0, 0, :] = (acc_scr[...] / denom)[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_kv", "interpret"))
+def decode_attention_kernel(q, k, v, kv_len, *,
+                            blk_kv: int = DEFAULT_BLOCK_KV,
+                            interpret: bool = False):
+    """q: (B, 1, Hq, hd); k, v: (B, L, Hkv, hd); kv_len: scalar int32.
+    GQA is resolved in the BlockSpec index map — no K/V expansion."""
+    b, one, hq, hd = q.shape
+    assert one == 1
+    L, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    blk_kv = min(blk_kv, L)
+    L_pad = -L % blk_kv
+    if L_pad:
+        k = jnp.pad(k, ((0, 0), (0, L_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, L_pad), (0, 0), (0, 0)))
+    Lp = L + L_pad
+    scale = 1.0 / math.sqrt(hd)
+    kv_len_arr = jnp.full((1,), kv_len, jnp.int32)
+
+    grid = (b, hq, Lp // blk_kv)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, blk_kv=blk_kv, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # kv_len
+            pl.BlockSpec((1, 1, 1, hd), lambda bi, hi, ki: (bi, 0, hi, 0)),
+            # GQA: the kv-head block index is hq // rep — no repeat in HBM
+            pl.BlockSpec((1, blk_kv, 1, hd),
+                         lambda bi, hi, ki: (bi, ki, hi // rep, 0)),
+            pl.BlockSpec((1, blk_kv, 1, hd),
+                         lambda bi, hi, ki: (bi, ki, hi // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda bi, hi, ki: (bi, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),     # running max
+            pltpu.VMEM((1, 1), jnp.float32),     # running denom
+            pltpu.VMEM((1, hd), jnp.float32),    # output acc
+        ],
+        interpret=interpret,
+    )(kv_len_arr, q, k, v)
+    return out

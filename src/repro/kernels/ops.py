@@ -1,0 +1,57 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container kernels execute in interpret mode (the kernel body runs
+as plain JAX ops); on TPU set REPRO_PALLAS_INTERPRET=0 to compile for real.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_kernel
+from .ref import terapipe_attention_ref
+from .terapipe_attention import terapipe_attention_kernel
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def terapipe_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       *, ctx_len: int) -> jnp.ndarray:
+    """Flash attention of a query slice at context offset (B, l, H, hd).
+
+    k/v may have fewer (GQA) heads; they are expanded here.  Differentiable
+    via a custom-free fallback: backward uses the reference formulation (the
+    kernel is the inference/forward hot path; a fused bwd kernel is a noted
+    follow-up in EXPERIMENTS.md §Perf).
+    """
+    h, hkv = q.shape[2], k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    @jax.custom_vjp
+    def _attn(q, k, v):
+        return terapipe_attention_kernel(q, k, v, ctx_len=ctx_len,
+                                         interpret=_INTERPRET)
+
+    def _fwd(q, k, v):
+        return _attn(q, k, v), (q, k, v)
+
+    def _bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(lambda q, k, v: terapipe_attention_ref(q, k, v, ctx_len),
+                         q, k, v)
+        return vjp(g)
+
+    _attn.defvjp(_fwd, _bwd)
+    return _attn(q, k, v)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len) -> jnp.ndarray:
+    """Flash decode: q (B,1,Hq,hd) vs cache (B,L,Hkv,hd) valid to kv_len.
+    GQA resolved inside the kernel's BlockSpec index map (no K/V repeat)."""
+    return decode_attention_kernel(q, k, v, kv_len, interpret=_INTERPRET)

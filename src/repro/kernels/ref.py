@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def terapipe_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           ctx_len: int) -> jnp.ndarray:
+    """Attention of a query slice at absolute offset ``ctx_len``.
+
+    q: (B, l, H, hd); k, v: (B, ctx_len + l, H, hd).
+    Query i (absolute position ctx_len+i) attends keys [0, ctx_len+i].
+    """
+    b, l, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qp = jnp.arange(l)[:, None] + ctx_len
+    kp = jnp.arange(sk)[None, :]
+    logits = jnp.where(qp >= kp, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Single-token decode: q (B, 1, H, hd); k/v (B, Lmax, H, hd); positions
+    >= kv_len masked."""
+    b, _, h, hd = q.shape
+    lmax = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(lmax)[None, :] < jnp.asarray(kv_len)[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

@@ -1,0 +1,125 @@
+"""Pallas TPU flash-attention kernel for the TeraPipe inner op.
+
+Computes attention of a query slice (length l, absolute offset ctx) over
+keys/values of length ctx + l — the paper's t_fwd(l, ctx) hot spot — without
+materializing the (l, ctx+l) score matrix in HBM.
+
+TPU mapping (DESIGN.md §3): grid (B, H, n_q_blocks, n_kv_blocks) with the KV
+block index innermost — TPU grids execute sequentially minor-to-major, so the
+running-softmax state (m, s, acc) lives in VMEM scratch and persists across
+the KV sweep of one query block.  Blocks are 128×128 (MXU-aligned); the
+output is written on the last KV iteration.  Fully-masked KV blocks (beyond
+the causal frontier ctx + (iq+1)·blk_q) are skipped with pl.when.
+
+Validated in interpret mode against kernels.ref (CPU container; TPU is the
+compile target).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = float("-inf")
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, s_scr, acc_scr, *,
+                 ctx_len: int, sk: int, blk_q: int, blk_kv: int, scale: float):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of this q block / kv block
+    q_pos = ctx_len + iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 0)
+    kv_pos = ikv * blk_kv + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 1)
+
+    # skip blocks fully beyond the causal frontier of this q block
+    frontier = ctx_len + (iq + 1) * blk_q   # first invalid kv position + 1
+    @pl.when(ikv * blk_kv < frontier)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (blk_q, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (blk_kv, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (blk_q, blk_kv)
+        mask = (q_pos >= kv_pos) & (kv_pos < sk)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]                                 # (blk_q, 1)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (can't happen for valid rows: diag present)
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(jnp.isfinite(m_prev), alpha, 0.0)
+        s_scr[...] = s_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(s_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx_len", "blk_q", "blk_kv",
+                                             "interpret"))
+def terapipe_attention_kernel(q, k, v, *, ctx_len: int,
+                              blk_q: int = DEFAULT_BLOCK_Q,
+                              blk_kv: int = DEFAULT_BLOCK_KV,
+                              interpret: bool = False):
+    """q: (B, l, H, hd); k, v: (B, Sk, H, hd) with Sk >= ctx_len + l.
+    Heads must already be GQA-expanded to match q."""
+    b, l, h, hd = q.shape
+    sk = k.shape[1]
+    assert k.shape == v.shape and k.shape[2] == h, (q.shape, k.shape)
+    blk_q = min(blk_q, l)
+    blk_kv = min(blk_kv, sk)
+    scale = 1.0 / math.sqrt(hd)
+
+    # pad seq dims to block multiples (masked out by position checks)
+    l_pad = -l % blk_q
+    sk_pad = -sk % blk_kv
+    if l_pad:
+        q = jnp.pad(q, ((0, 0), (0, l_pad), (0, 0), (0, 0)))
+    if sk_pad:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+    lp, skp = l + l_pad, sk + sk_pad
+
+    grid = (b, h, lp // blk_q, skp // blk_kv)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, ctx_len=ctx_len, sk=sk,
+                          blk_q=blk_q, blk_kv=blk_kv, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, blk_kv, 1, hd), lambda bi, hi, qi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, blk_kv, 1, hd), lambda bi, hi, qi, ki: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, hd),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, lp, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((blk_q, 1), jnp.float32),    # running denom
+            pltpu.VMEM((blk_q, hd), jnp.float32),   # output acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :l]

@@ -1,0 +1,268 @@
+"""Extract roofline terms from compiled HLO.
+
+``cost_analysis()`` gives FLOPs and bytes accessed; collective traffic is not
+included, so we parse the optimized HLO text and sum collective operand
+sizes, weighting by the ring-algorithm byte multiplier:
+
+    all-reduce       2 (N-1)/N  ≈ 2x payload on the wire per chip
+    all-gather       (N-1)/N    (payload = gathered output)
+    reduce-scatter   (N-1)/N    (payload = scattered input)
+    all-to-all       (N-1)/N
+    collective-permute 1        (point-to-point)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# v5e constants (per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+
+_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-type wire bytes (per chip, ring-model) from optimized HLO."""
+    out: Dict[str, float] = {k: 0.0 for k in _MULT}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3).lower()
+        out[op] += _shape_bytes(dtype, dims) * _MULT[op]
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All inputs are PER-DEVICE quantities: XLA's cost_analysis() on an
+    SPMD-partitioned executable reports the per-device program (verified
+    empirically: a 4-way sharded matmul reports flops/4), and the parsed HLO
+    shapes are per-device too.  Equivalent to the global formula
+    HLO_global/(chips × peak) since HLO_global = per_dev × chips."""
+    flops: float                 # HLO flops (per device, per step)
+    bytes_accessed: float        # HLO bytes (per device)
+    coll_bytes: float            # wire bytes (per device, ring-weighted)
+    n_chips: int
+    model_flops: Optional[float] = None   # 6*N*D useful flops (GLOBAL)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / global HLO flops (remat/redundancy waste <=> <1)."""
+        if self.model_flops:
+            return self.model_flops / (self.flops * self.n_chips)
+        return None
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes, "n_chips": self.n_chips,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "useful_ratio": self.useful_ratio,
+        }
+
+
+def analytic_memory_per_device(cfg, seq_len: int, global_batch: int,
+                               kind: str, n_chips: int, *,
+                               model_shard: int = 16, fsdp: bool = True
+                               ) -> Dict[str, float]:
+    """Deterministic per-device HBM estimate (bytes) for the fit claim.
+
+    XLA:CPU's buffer assignment over-allocates heavily vs the TPU compiler
+    (loose reuse across loop iterations; verified: a fwd pass whose true live
+    set is ~3 GiB was assigned 85 GiB), so the dry-run reports BOTH the CPU
+    temp number and this estimate:
+      params (fp32, TP×FSDP-sharded) + adam m,v (fp32) + grads + activation
+      checkpoints (1 bf16 (B,S,d) stack per layer under full remat) + peak
+      per-layer transient + KV cache for decode shapes.
+    """
+    total = total_param_count(cfg)
+    shard = n_chips if fsdp else model_shard
+    p_bytes = 4 * total / shard
+    if kind == "train":
+        opt_bytes = 8 * total / shard
+        grad_bytes = 4 * total / shard
+        b_loc = max(1, global_batch // (n_chips // model_shard))
+        act_ckpt = 2 * b_loc * seq_len * cfg.d_model * _eff_layers(cfg)
+        transient = 4 * b_loc * 1024 * seq_len  # one f32 attn-logit chunk
+        transient += 2 * b_loc * seq_len * max(cfg.d_ff, 3 * cfg.d_model) / model_shard
+        kv = 0.0
+    else:
+        opt_bytes = grad_bytes = 0.0
+        p_bytes = 2 * total / shard              # serving: bf16 weights
+        b_loc = max(1, global_batch // (n_chips // model_shard))
+        act_ckpt = 0.0
+        tokens = seq_len if kind == "prefill" else 1
+        transient = 2 * b_loc * tokens * cfg.d_model * 4
+        kv_len = min(seq_len, cfg.window) if cfg.window else seq_len
+        if cfg.family == "ssm":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            kv = 4 * cfg.n_layers * b_loc * (d_inner // cfg.ssm_head_dim) * \
+                cfg.ssm_head_dim * cfg.ssm_state
+        else:
+            kv_heads = max(1, cfg.n_kv_heads // model_shard)
+            n_attn = _attn_layers(cfg)
+            kv = 2 * 2 * n_attn * b_loc * kv_len * kv_heads * cfg.hd
+            if cfg.family == "hybrid":
+                kv += 4 * cfg.n_layers * b_loc * cfg.d_model  # LRU states
+    out = {"params": p_bytes, "opt": opt_bytes, "grads": grad_bytes,
+           "act_ckpt": act_ckpt, "transient": transient, "kv": kv}
+    out["total"] = sum(out.values())
+    return out
+
+
+def analytic_min_bytes(cfg, seq_len: int, global_batch: int, kind: str,
+                       n_chips: int, model_shard: int = 16) -> float:
+    """Per-device HBM traffic LOWER BOUND (bytes/step).
+
+    The HLO-derived bytes are an upper bound: the CPU backend fuses far less
+    than the TPU compiler, so many elementwise ops appear as separate
+    HBM-visible tensors.  The lower bound assumes perfect fusion: weights
+    read once per pass (fwd+bwd+remat = 3 for train), the residual stream
+    read+written twice per layer per pass, plus KV/attention traffic.
+    """
+    p_local = 4 * total_param_count(cfg) / n_chips     # fsdp-sharded fp32
+    d = cfg.d_model
+    if kind == "train":
+        b_loc = max(1, global_batch // (n_chips // model_shard))
+        passes = 3.0
+        weights = passes * p_local * model_shard       # gathered per pass
+        stream = passes * 4 * b_loc * seq_len * d * _eff_layers(cfg) * 2
+        grads = 3 * p_local                            # grad write + opt r/w
+        return weights + stream + grads
+    b_loc = max(1, global_batch // (n_chips // model_shard))
+    tokens = seq_len if kind == "prefill" else 1
+    weights = 2 * total_param_count(cfg) / n_chips * model_shard
+    stream = 2 * 2 * b_loc * tokens * d * _eff_layers(cfg)
+    kv = 0.0
+    if kind == "decode" and cfg.family not in ("ssm",):
+        kv_len = min(seq_len, cfg.window) if cfg.window else seq_len
+        kv_heads = max(1, cfg.n_kv_heads // model_shard)
+        kv = 2 * 2 * _attn_layers(cfg) * b_loc * kv_len * kv_heads * cfg.hd
+    return weights + stream + kv
+
+
+def _eff_layers(cfg) -> int:
+    if cfg.family == "encdec":
+        return (cfg.n_enc_layers or cfg.n_layers) + (cfg.n_dec_layers or cfg.n_layers)
+    return cfg.n_layers
+
+
+def _attn_layers(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.block_pattern)
+    if cfg.family == "encdec":
+        return 2 * (cfg.n_dec_layers or cfg.n_layers)   # self + cross
+    return cfg.n_layers
+
+
+def total_param_count(cfg) -> float:
+    d, hd = cfg.d_model, cfg.hd
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    if cfg.family == "moe" or cfg.n_experts:
+        ff = 3 * d * cfg.d_expert * (cfg.n_experts + cfg.n_shared_experts)
+        ff += d * cfg.n_experts
+        n = cfg.n_layers * (attn + ff)
+    elif cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_head_dim
+        n = cfg.n_layers * (d * (2 * d_inner + 2 * cfg.ssm_state + h) + d_inner * d)
+    elif cfg.family == "hybrid":
+        rec = 6 * d * d
+        att = attn + 3 * d * cfg.d_ff
+        pat = len(cfg.block_pattern) or 3
+        n = cfg.n_layers * ((pat - 1) * rec + att) / pat
+    elif cfg.family == "encdec":
+        n = ((cfg.n_enc_layers or cfg.n_layers) * (attn + 3 * d * cfg.d_ff)
+             + (cfg.n_dec_layers or cfg.n_layers) * (2 * attn + 3 * d * cfg.d_ff))
+    else:
+        n = cfg.n_layers * (attn + 3 * d * cfg.d_ff)
+    n += cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return float(n)
+
+
+def model_flops_train(cfg, seq_len: int, global_batch: int) -> float:
+    """6·N_active·D useful train flops (fwd+bwd)."""
+    n = active_param_count(cfg)
+    return 6.0 * n * seq_len * global_batch
+
+
+def model_flops_forward(cfg, tokens: float) -> float:
+    return 2.0 * active_param_count(cfg) * tokens
+
+
+def active_param_count(cfg) -> float:
+    """Parameters touched per token (MoE: top-k + shared experts only)."""
+    d, hd = cfg.d_model, cfg.hd
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    if cfg.family == "moe" or cfg.n_experts:
+        ff = 3 * d * cfg.d_expert * (cfg.moe_top_k + cfg.n_shared_experts)
+        ff += d * cfg.n_experts
+        per_layer = attn + ff
+        n = cfg.n_layers * per_layer
+    elif cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_head_dim
+        per_layer = d * (2 * d_inner + 2 * cfg.ssm_state + h) + d_inner * d
+        n = cfg.n_layers * per_layer
+    elif cfg.family == "hybrid":
+        rec = 6 * d * d
+        att = attn + 3 * d * cfg.d_ff
+        pat = len(cfg.block_pattern) or 3
+        n = cfg.n_layers * ((pat - 1) * rec + att) / pat
+    elif cfg.family == "encdec":
+        enc = (cfg.n_enc_layers or cfg.n_layers) * (attn + 3 * d * cfg.d_ff)
+        dec = (cfg.n_dec_layers or cfg.n_layers) * (2 * attn + 3 * d * cfg.d_ff)
+        n = enc + dec
+    else:
+        n = cfg.n_layers * (attn + 3 * d * cfg.d_ff)
+    n += cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return float(n)

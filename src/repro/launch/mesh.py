@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_terapipe_mesh(*, n_pipe: int = 16, multi_pod: bool = False) -> Mesh:
+    """Re-factor the model axis into (pipe, tp) for TeraPipe mode: pipeline
+    stages map to ICI-adjacent groups, TP within a stage (paper §3.4 —
+    'operation partitioning inside a node, pipeline across')."""
+    assert 16 % n_pipe == 0
+    tp = 16 // n_pipe
+    if multi_pod:
+        shape, axes = (2, 16, n_pipe, tp), ("pod", "data", "pipe", "tp")
+    else:
+        shape, axes = (16, n_pipe, tp), ("data", "pipe", "tp")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

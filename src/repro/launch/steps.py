@@ -1,0 +1,130 @@
+"""GSPMD step builders + abstract (no-allocation) param/state structures.
+
+These are the functions the dry-run lowers and the trainer jits:
+  * train_step(params, opt_state, batch) -> (params, opt_state, loss)
+  * prefill_step(params, batch)          -> (logits, caches)
+  * decode_step(params, caches, batch, pos) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import param_shardings, batch_shardings
+from repro.models import Model
+from repro.models.common import set_activation_sharding
+from repro.optim.adamw import Optimizer, adamw, apply_updates, cosine_schedule
+
+
+def abstract_init(model: Model, seed: int = 0, param_dtype=None):
+    """(param ShapeDtypeStructs, specs) without allocating anything.
+    param_dtype (e.g. bf16) recasts float params (use with master weights)."""
+    captured = {}
+
+    def init_params_only(rng):
+        p, s = model.init(rng)
+        captured["specs"] = s       # static python data, set during tracing
+        return p
+
+    structs = jax.eval_shape(init_params_only, jax.random.PRNGKey(seed))
+    if param_dtype is not None:
+        structs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, param_dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a, structs)
+    return structs, captured["specs"]
+
+
+def abstract_opt_state(optimizer: Optimizer, param_structs):
+    return jax.eval_shape(optimizer.init, param_structs)
+
+
+def abstract_caches(model: Model, batch: int, max_len: int,
+                    dtype=jnp.bfloat16, mode="decode"):
+    return jax.eval_shape(
+        functools.partial(model.init_caches, batch, max_len, dtype, mode=mode))
+
+
+# ---------------------------------------------------------------------------
+def make_train_step(model: Model, optimizer: Optimizer):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, batch, pos):
+        return model.decode_step(params, caches, batch, pos)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+def cache_pspec(shape: Tuple[int, ...], mesh: Mesh,
+                data_axes: Sequence[str], model_axis: str = "model") -> P:
+    """Heuristic cache sharding: batch dim (axis 1 of stacked caches) over
+    data axes when divisible; then kv-head-like dim (ndim-2), else the
+    largest remaining dim, over the model axis."""
+    entries: list = [None] * len(shape)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    msize = mesh.shape[model_axis]
+    if len(shape) >= 2 and shape[1] % dsize == 0 and shape[1] > 0:
+        entries[1] = tuple(data_axes)
+    cand_order = []
+    if len(shape) >= 2:
+        cand_order.append(len(shape) - 2)
+    cand_order += sorted((i for i in range(len(shape))),
+                         key=lambda i: -shape[i])
+    for i in cand_order:
+        if entries[i] is None and shape[i] % msize == 0 and shape[i] >= msize:
+            entries[i] = model_axis
+            break
+    return P(*entries)
+
+
+def cache_shardings(cache_structs, mesh: Mesh, data_axes: Sequence[str]):
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, cache_pspec(a.shape, mesh, data_axes)),
+        cache_structs)
+
+
+def gspmd_shardings(model: Model, mesh: Mesh, *, optimizer=None,
+                    fsdp: bool = True, data_axes=("data",), param_dtype=None,
+                    rules=None, seq_axis=None):
+    """(param_structs, specs, param_sh, opt_structs, opt_sh).
+
+    Side effect: pins the models' activation batch sharding to data_axes
+    (see models.common.constrain_acts).
+    """
+    set_activation_sharding(data_axes, seq_axis=seq_axis)
+    structs, specs = abstract_init(model, param_dtype=param_dtype)
+    fsdp_axes = tuple(data_axes) if fsdp else None
+    p_sh = param_shardings(specs, structs, mesh, fsdp_axes=fsdp_axes,
+                           rules=rules)
+    if optimizer is None:
+        return structs, specs, p_sh, None, None
+    o_structs = abstract_opt_state(optimizer, structs)
+    # moments (and master copy) share the param layout; step is replicated
+    o_sh = type(o_structs)(
+        NamedSharding(mesh, P()),
+        param_shardings(specs, o_structs.m, mesh, fsdp_axes=fsdp_axes,
+                        rules=rules),
+        param_shardings(specs, o_structs.v, mesh, fsdp_axes=fsdp_axes,
+                        rules=rules),
+        (param_shardings(specs, o_structs.master, mesh, fsdp_axes=fsdp_axes,
+                         rules=rules)
+         if o_structs.master is not None else None),
+    )
+    return structs, specs, p_sh, o_structs, o_sh

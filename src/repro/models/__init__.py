@@ -1,0 +1,4 @@
+from .common import ModelConfig
+from .lm import Model, BlockGroup, build_model
+
+__all__ = ["ModelConfig", "Model", "BlockGroup", "build_model"]

@@ -1,0 +1,244 @@
+"""Shared model building blocks.
+
+Everything here is a pure function over explicit parameter pytrees.  No
+framework (flax/haiku) — parameters are nested dicts of jnp arrays, with a
+parallel "spec" pytree of logical-axis tuples used by repro.distributed to
+derive NamedShardings.  Per-layer parameters are STACKED along a leading
+``layers`` axis so the layer stack runs under ``jax.lax.scan`` (small HLO,
+fast AOT compile even for 94-layer models).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    d_expert: int = 0                # per-expert hidden dim
+    capacity_factor: float = 1.25
+    moe_block: int = 128             # routing-group size in tokens (see moe.py)
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # --- hybrid (recurrentgemma) ---
+    window: int = 0                  # local attention window
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    rglru_conv: int = 4
+    # --- enc-dec (whisper backbone) ---
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    # --- vlm ---
+    n_patches: int = 0               # image patch embeddings prepended
+    # --- numerics ---
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    remat_policy: str = "full"       # full | dots (save MXU outputs)
+    use_kernel: bool = False         # route attention through the Pallas kernel
+    # --- manual tensor parallelism (inside shard_map pipeline stages) ---
+    # When set, weights arrive pre-sharded over this mesh axis (heads/ff/
+    # experts dims) and block fns psum partial outputs over it.
+    tp_axis: Any = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding (GSPMD mode)
+# ---------------------------------------------------------------------------
+# XLA's sharding propagation can lose the batch sharding of activations (e.g.
+# through the embedding gather when the table is FSDP-sharded on d_model).
+# Step builders set the data axes here; model code pins activations' batch dim
+# at the key junctions (embed output, per-layer scan carry, loss input).
+_ACT_AXES = None
+_SEQ_AXIS = None   # sequence parallelism: shard dim 1 (seq) over this axis
+                   # between blocks — XLA turns TP all-reduces into
+                   # reduce-scatter + all-gather (half the wire bytes) and
+                   # runs norms/elementwise seq-sharded (Korthikanti et al.)
+
+
+def set_activation_sharding(axes, seq_axis=None):
+    """axes: tuple of mesh axis names for the batch dim, or None to disable.
+    seq_axis: optional mesh axis for sequence parallelism."""
+    global _ACT_AXES, _SEQ_AXIS
+    _ACT_AXES = tuple(axes) if axes else None
+    _SEQ_AXIS = seq_axis
+
+
+def constrain_acts(x: "jnp.ndarray") -> "jnp.ndarray":
+    if _ACT_AXES is None or x.ndim < 2:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or any(a not in mesh.shape for a in _ACT_AXES):
+        return x
+    total = 1
+    for a in _ACT_AXES:
+        total *= mesh.shape[a]
+    if x.shape[0] % total != 0:
+        return x
+    from jax.sharding import PartitionSpec as P
+    rest = [None] * (x.ndim - 1)
+    if (_SEQ_AXIS is not None and x.ndim >= 3 and _SEQ_AXIS in mesh.shape
+            and x.shape[1] % mesh.shape[_SEQ_AXIS] == 0):
+        rest[0] = _SEQ_AXIS
+    spec = P(_ACT_AXES, *rest)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal over fan-in (standard transformer init)."""
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def swiglu(x_gate: jnp.ndarray, x_up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(x_gate) * x_up
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs      # (..., seq, hd/2)
+    angles = angles[..., :, None, :]                                   # (..., seq, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (pure-jnp path; the Pallas kernel path lives in repro.kernels)
+# ---------------------------------------------------------------------------
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, kv, hd) -> (B, S, kv*n_rep, hd)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(b, s, kv * n_rep, hd)
+
+
+def attention_scores(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Sk, H, hd)
+    v: jnp.ndarray,            # (B, Sk, H, hd)
+    *,
+    mask: Optional[jnp.ndarray] = None,   # broadcastable to (B, H, Sq, Sk); True = keep
+) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_scores_gqa(
+    q: jnp.ndarray,            # (B, Sq, Hq, hd)
+    k: jnp.ndarray,            # (B, Sk, Hkv, hd), Hkv divides Hq
+    v: jnp.ndarray,            # (B, Sk, Hkv, hd)
+    *,
+    mask: Optional[jnp.ndarray] = None,   # broadcastable to (B, Sq, Sk)
+) -> jnp.ndarray:
+    """GQA attention WITHOUT materializing repeated K/V (grouped einsum) —
+    at 32k-decode the repeat would cost Hq/Hkv × the KV cache in HBM."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, sq, hkv, rep, hd)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits,
+                           jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return out.reshape(b, sq, hq, hd)
+
+
+def causal_mask(sq: int, sk: int, q_offset: int = 0) -> jnp.ndarray:
+    """Causal mask for queries at absolute positions q_offset..q_offset+sq-1
+    attending over keys at positions 0..sk-1.  True = attend."""
+    qp = jnp.arange(sq)[:, None] + q_offset
+    kp = jnp.arange(sk)[None, :]
+    return qp >= kp
+
+
+def local_causal_mask(sq: int, sk: int, window: int, q_offset: int = 0) -> jnp.ndarray:
+    qp = jnp.arange(sq)[:, None] + q_offset
+    kp = jnp.arange(sk)[None, :]
+    return (qp >= kp) & (qp - kp < window)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy LM loss
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits (B, S, V) fp-any; labels (B, S) int32.  Mean over valid tokens."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

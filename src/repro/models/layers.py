@@ -1,0 +1,78 @@
+"""Dense transformer block: pre-RMSNorm attention + SwiGLU FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .common import ModelConfig, dense_init, rms_norm, swiglu
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int = 0):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_gate": dense_init(ks[0], (cfg.d_model, d_ff)),
+        "w_up": dense_init(ks[1], (cfg.d_model, d_ff)),
+        "w_down": dense_init(ks[2], (d_ff, cfg.d_model)),
+    }
+    s = {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"), "w_down": ("ff", "embed")}
+    return p, s
+
+
+def ffn(p, x: jnp.ndarray, tp_axis=None) -> jnp.ndarray:
+    h = swiglu(x @ p["w_gate"].astype(x.dtype), x @ p["w_up"].astype(x.dtype))
+    y = h @ p["w_down"].astype(x.dtype)
+    if tp_axis is not None:
+        y = jax.lax.psum(y, tp_axis)
+    return y
+
+
+def init_dense_block(key, cfg: ModelConfig):
+    k_attn, k_ffn = jax.random.split(key)
+    p_attn, s_attn = attn_mod.init_attn(k_attn, cfg)
+    p_ffn, s_ffn = init_ffn(k_ffn, cfg)
+    p = {
+        "attn": p_attn,
+        "ffn": p_ffn,
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_ffn": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    s = {"attn": s_attn, "ffn": s_ffn, "ln_attn": (None,), "ln_ffn": (None,)}
+    return p, s
+
+
+def dense_block_full(p, cfg: ModelConfig, x: jnp.ndarray, *, causal: bool = True,
+                     window: int = 0) -> jnp.ndarray:
+    x = x + attn_mod.attn_full(p["attn"], cfg, rms_norm(x, p["ln_attn"]),
+                               causal=causal, window=window)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln_ffn"]), cfg.tp_axis)
+    return x
+
+
+def dense_block_sliced(p, cfg: ModelConfig, x: jnp.ndarray, kv_cache, ctx_len: int,
+                       *, window: int = 0):
+    a, kv_cache = attn_mod.attn_sliced(p["attn"], cfg, rms_norm(x, p["ln_attn"]),
+                                       kv_cache, ctx_len, window=window)
+    x = x + a
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln_ffn"]), cfg.tp_axis)
+    return x, kv_cache
+
+
+def dense_block_sliced_dyn(p, cfg: ModelConfig, x: jnp.ndarray, kv_cache, ctx,
+                           *, window: int = 0):
+    """Traced-ctx variant for the lockstep SPMD pipeline."""
+    a, kv_cache = attn_mod.attn_sliced_dyn(p["attn"], cfg, rms_norm(x, p["ln_attn"]),
+                                           kv_cache, ctx, window=window)
+    x = x + a
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln_ffn"]), cfg.tp_axis)
+    return x, kv_cache
+
+
+def dense_block_decode(p, cfg: ModelConfig, x: jnp.ndarray, kv_cache, pos,
+                       *, window: int = 0, ring: bool = False):
+    a, kv_cache = attn_mod.attn_decode(p["attn"], cfg, rms_norm(x, p["ln_attn"]),
+                                       kv_cache, pos, window=window, ring=ring)
+    x = x + a
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln_ffn"]), cfg.tp_axis)
+    return x, kv_cache

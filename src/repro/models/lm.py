@@ -1,0 +1,632 @@
+"""Model assembly: every assigned architecture family behind one API.
+
+A model is a stack of *block groups* — homogeneous runs of layers whose
+per-layer parameters are stacked on a leading axis and executed with
+``jax.lax.scan`` (small HLO even at 94 layers).  Heterogeneous stacks
+(DeepSeek's first-dense-then-MoE, RecurrentGemma's (rec,rec,attn) pattern
++ tail, Whisper's enc→dec) are sequences of groups.
+
+Execution modes per group:
+  full(bp, x)                 -> x                      train forward
+  sliced(bp, x, cache, ctx)   -> (x, cache)             TeraPipe slice / prefill
+  decode(bp, x, cache, pos)   -> (x, cache)              one-token serving
+
+The TeraPipe pipeline (repro.core.pipeline) consumes the same group list and
+splits the flattened block index range across pipeline stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import layers as layers_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import (ModelConfig, constrain_acts, embed_init, rms_norm,
+                     softmax_xent)
+
+Params = Dict[str, Any]
+
+
+class BlockGroup(NamedTuple):
+    name: str            # key into params["groups"][name]
+    count: int           # number of stacked blocks in this group
+    full: Callable       # (bp, x) -> x
+    sliced: Callable     # (bp, x, cache, ctx:int) -> (x, cache)
+    decode: Callable     # (bp, x, cache, pos) -> (x, cache)
+    init_cache: Callable # (batch, max_len, dtype) -> stacked cache pytree
+    causal: bool = True  # token-sliceable (False => encoder-style group)
+    sliced_dyn: Callable = None  # like sliced but ctx may be traced (pipeline);
+                                 # None => sliced is already trace-safe in ctx
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    groups: List[BlockGroup]
+    init: Callable                 # rng -> (params, specs)
+    # embedding / head (head includes final norm; fns below are mode-generic)
+    embed: Callable                # (params, batch, ctx:int) -> x  (token slice ok)
+    head: Callable                 # (params, x) -> logits
+    loss: Callable                 # (params, batch) -> scalar
+    forward: Callable              # (params, batch) -> logits
+    prefill: Callable              # (params, batch, max_len) -> (logits, caches)
+    decode_step: Callable          # (params, caches, batch, pos) -> (logits, caches)
+    init_caches: Callable          # (batch, max_len, dtype) -> caches (list per group)
+    head_loss: Callable = None     # (params, x_final, labels) -> scalar (post-stack)
+
+    @property
+    def n_blocks(self) -> int:
+        return sum(g.count for g in self.groups)
+
+
+# ---------------------------------------------------------------------------
+# group executors
+# ---------------------------------------------------------------------------
+def _remat(body, cfg_or_true):
+    """jax.checkpoint with the configured policy."""
+    policy = None
+    if hasattr(cfg_or_true, "remat_policy") and cfg_or_true.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(body, policy=policy)
+
+
+def _scan_full(group: BlockGroup, bp, x, remat, cfg=None):
+    def body(h, bp_l):
+        return constrain_acts(group.full(bp_l, h)), None
+    if remat:
+        body = _remat(body, cfg if cfg is not None else remat)
+    x, _ = jax.lax.scan(body, x, bp)
+    return x
+
+
+def _scan_sliced(group: BlockGroup, bp, x, cache, ctx: int, remat, cfg=None):
+    def body(h, inp):
+        bp_l, c_l = inp
+        h, c_l = group.sliced(bp_l, h, c_l, ctx)
+        return constrain_acts(h), c_l
+    if remat:
+        body = _remat(body, cfg if cfg is not None else remat)
+    x, cache = jax.lax.scan(body, x, (bp, cache))
+    return x, cache
+
+
+def _scan_decode(group: BlockGroup, bp, x, cache, pos):
+    def body(h, inp):
+        bp_l, c_l = inp
+        h, c_l = group.decode(bp_l, h, c_l, pos)
+        return h, c_l
+    x, cache = jax.lax.scan(body, x, (bp, cache))
+    return x, cache
+
+
+def apply_groups_full(model: "Model", params, x):
+    for g in model.groups:
+        x = _scan_full(g, params["groups"][g.name], x, model.cfg.remat,
+                       model.cfg)
+    return x
+
+
+def apply_groups_sliced(model: "Model", params, x, caches, ctx: int):
+    new = []
+    for g, c in zip(model.groups, caches):
+        x, c = _scan_sliced(g, params["groups"][g.name], x, c, ctx,
+                            model.cfg.remat, model.cfg)
+        new.append(c)
+    return x, new
+
+
+def apply_groups_decode(model: "Model", params, x, caches, pos):
+    new = []
+    for g, c in zip(model.groups, caches):
+        x, c = _scan_decode(g, params["groups"][g.name], x, c, pos)
+        new.append(c)
+    return x, new
+
+
+# ---------------------------------------------------------------------------
+# stacked init helper
+# ---------------------------------------------------------------------------
+def _stack_init(init_one: Callable, key, count: int):
+    keys = jax.random.split(key, count)
+    params = jax.vmap(lambda k: init_one(k)[0])(keys)
+    _, spec_one = init_one(key)   # spec from a single layer
+    specs = jax.tree.map(lambda s: (None,) + tuple(s), spec_one,
+                         is_leaf=lambda s: isinstance(s, tuple))
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# chunked LM loss (never materializes (B, S, V) logits)
+# ---------------------------------------------------------------------------
+def chunked_xent(x: jnp.ndarray, w_head: jnp.ndarray, labels: jnp.ndarray,
+                 chunk: int = 512) -> jnp.ndarray:
+    b, s, d = x.shape
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    xr = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = (xc @ w_head.astype(xc.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.float32(0.0), (xr, lr))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# family builders
+# ---------------------------------------------------------------------------
+def _dense_like_groups(cfg: ModelConfig) -> List[Tuple[str, int, str]]:
+    """Returns [(group_name, count, kind)] for the block stack."""
+    if cfg.family in ("dense", "vlm"):
+        return [("blocks", cfg.n_layers, "dense")]
+    if cfg.family == "moe":
+        first_dense = 1 if cfg.n_shared_experts else 0   # deepseek convention
+        gs = []
+        if first_dense:
+            gs.append(("dense0", first_dense, "dense"))
+        gs.append(("moe", cfg.n_layers - first_dense, "moe"))
+        return gs
+    if cfg.family == "ssm":
+        return [("blocks", cfg.n_layers, "ssm")]
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern)           # (rec, rec, attn)
+        n_super = cfg.n_layers // pat
+        tail = cfg.n_layers - n_super * pat
+        gs = [("super", n_super, "super")]
+        if tail:
+            gs.append(("tail", tail, "rec"))
+        return gs
+    raise ValueError(cfg.family)
+
+
+def _make_dense_group(cfg: ModelConfig, name: str, count: int,
+                      window: int = 0) -> Tuple[BlockGroup, Callable]:
+    def full(bp, x):
+        return layers_mod.dense_block_full(bp, cfg, x, window=window)
+
+    def sliced(bp, x, cache, ctx):
+        return layers_mod.dense_block_sliced(bp, cfg, x, cache, ctx, window=window)
+
+    def sliced_dyn(bp, x, cache, ctx):
+        return layers_mod.dense_block_sliced_dyn(bp, cfg, x, cache, ctx, window=window)
+
+    def decode(bp, x, cache, pos):
+        return layers_mod.dense_block_decode(bp, cfg, x, cache, pos, window=window)
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16, mode="sliced"):
+        shape = (count, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+    def init_params(key):
+        return _stack_init(lambda k: layers_mod.init_dense_block(k, cfg), key, count)
+
+    return BlockGroup(name, count, full, sliced, decode, init_cache,
+                      sliced_dyn=sliced_dyn), init_params
+
+
+def _make_moe_group(cfg: ModelConfig, name: str, count: int) -> Tuple[BlockGroup, Callable]:
+    def init_one(k):
+        k1, k2 = jax.random.split(k)
+        p_attn, s_attn = attn_mod.init_attn(k1, cfg)
+        p_moe, s_moe = moe_mod.init_moe(k2, cfg)
+        p = {"attn": p_attn, "moe": p_moe,
+             "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+             "ln_ffn": jnp.zeros((cfg.d_model,), jnp.float32)}
+        s = {"attn": s_attn, "moe": s_moe, "ln_attn": (None,), "ln_ffn": (None,)}
+        return p, s
+
+    def full(bp, x):
+        x = x + attn_mod.attn_full(bp["attn"], cfg, rms_norm(x, bp["ln_attn"]))
+        x = x + moe_mod.moe_ffn(bp["moe"], cfg, rms_norm(x, bp["ln_ffn"]))
+        return x
+
+    def sliced(bp, x, cache, ctx):
+        a, cache = attn_mod.attn_sliced(bp["attn"], cfg, rms_norm(x, bp["ln_attn"]),
+                                        cache, ctx)
+        x = x + a
+        x = x + moe_mod.moe_ffn(bp["moe"], cfg, rms_norm(x, bp["ln_ffn"]))
+        return x, cache
+
+    def sliced_dyn(bp, x, cache, ctx):
+        a, cache = attn_mod.attn_sliced_dyn(bp["attn"], cfg, rms_norm(x, bp["ln_attn"]),
+                                            cache, ctx)
+        x = x + a
+        x = x + moe_mod.moe_ffn(bp["moe"], cfg, rms_norm(x, bp["ln_ffn"]))
+        return x, cache
+
+    def decode(bp, x, cache, pos):
+        a, cache = attn_mod.attn_decode(bp["attn"], cfg, rms_norm(x, bp["ln_attn"]),
+                                        cache, pos)
+        x = x + a
+        x = x + moe_mod.moe_ffn(bp["moe"], cfg, rms_norm(x, bp["ln_ffn"]))
+        return x, cache
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16, mode="sliced"):
+        shape = (count, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+    def init_params(key):
+        return _stack_init(init_one, key, count)
+
+    return BlockGroup(name, count, full, sliced, decode, init_cache,
+                      sliced_dyn=sliced_dyn), init_params
+
+
+def _make_ssm_group(cfg: ModelConfig, name: str, count: int) -> Tuple[BlockGroup, Callable]:
+    def full(bp, x):
+        y, _ = ssm_mod.mamba2_block(bp, cfg, x, None)
+        return y
+
+    def sliced(bp, x, cache, ctx):
+        y, cache = ssm_mod.mamba2_block(bp, cfg, x, cache)
+        return y, cache
+
+    def decode(bp, x, cache, pos):
+        return ssm_mod.mamba2_decode(bp, cfg, x, cache)
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16, mode="sliced"):
+        conv, ssm = ssm_mod.init_ssm_state(cfg, batch, count)
+        return conv, ssm
+
+    def init_params(key):
+        return _stack_init(lambda k: ssm_mod.init_mamba2(k, cfg), key, count)
+
+    return BlockGroup(name, count, full, sliced, decode, init_cache), init_params
+
+
+def _make_rec_group(cfg: ModelConfig, name: str, count: int) -> Tuple[BlockGroup, Callable]:
+    def full(bp, x):
+        y, _ = rglru_mod.rec_block(bp, cfg, x, None)
+        return y
+
+    def sliced(bp, x, cache, ctx):
+        return rglru_mod.rec_block(bp, cfg, x, cache)
+
+    def decode(bp, x, cache, pos):
+        return rglru_mod.rec_block_decode(bp, cfg, x, cache)
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16, mode="sliced"):
+        return rglru_mod.init_rec_state(cfg, batch, count)
+
+    def init_params(key):
+        return _stack_init(lambda k: rglru_mod.init_rec_block(k, cfg), key, count)
+
+    return BlockGroup(name, count, full, sliced, decode, init_cache), init_params
+
+
+def _make_super_group(cfg: ModelConfig, name: str, count: int) -> Tuple[BlockGroup, Callable]:
+    """RecurrentGemma super-block: (rec, rec, attn-with-window)."""
+    n_rec = sum(1 for b in cfg.block_pattern if b == "rec")
+    w = cfg.window
+
+    def init_one(k):
+        ks = jax.random.split(k, n_rec + 1)
+        p, s = {}, {}
+        for i in range(n_rec):
+            p[f"rec{i}"], s[f"rec{i}"] = rglru_mod.init_rec_block(ks[i], cfg)
+        p["attn"], s["attn"] = layers_mod.init_dense_block(ks[-1], cfg)
+        return p, s
+
+    def full(bp, x):
+        for i in range(n_rec):
+            x, _ = rglru_mod.rec_block(bp[f"rec{i}"], cfg, x, None)
+        return layers_mod.dense_block_full(bp["attn"], cfg, x, window=w)
+
+    def sliced(bp, x, cache, ctx):
+        rec_c, kv_c = cache
+        new_rec = []
+        for i in range(n_rec):
+            x, c = rglru_mod.rec_block(bp[f"rec{i}"], cfg, x, (rec_c[0][i], rec_c[1][i]))
+            new_rec.append(c)
+        x, kv_c = layers_mod.dense_block_sliced(bp["attn"], cfg, x, kv_c, ctx, window=w)
+        rec_c = (jnp.stack([c[0] for c in new_rec]), jnp.stack([c[1] for c in new_rec]))
+        return x, (rec_c, kv_c)
+
+    def sliced_dyn(bp, x, cache, ctx):
+        rec_c, kv_c = cache
+        new_rec = []
+        for i in range(n_rec):
+            x, c = rglru_mod.rec_block(bp[f"rec{i}"], cfg, x, (rec_c[0][i], rec_c[1][i]))
+            new_rec.append(c)
+        x, kv_c = layers_mod.dense_block_sliced_dyn(bp["attn"], cfg, x, kv_c, ctx,
+                                                    window=w)
+        rec_c = (jnp.stack([c[0] for c in new_rec]), jnp.stack([c[1] for c in new_rec]))
+        return x, (rec_c, kv_c)
+
+    def decode(bp, x, cache, pos):
+        rec_c, kv_c = cache
+        new_rec = []
+        for i in range(n_rec):
+            x, c = rglru_mod.rec_block_decode(bp[f"rec{i}"], cfg, x,
+                                              (rec_c[0][i], rec_c[1][i]))
+            new_rec.append(c)
+        # ring buffer: KV cache is at most `window` long even at 500k+ positions
+        x, kv_c = layers_mod.dense_block_decode(bp["attn"], cfg, x, kv_c, pos,
+                                                window=w, ring=True)
+        rec_c = (jnp.stack([c[0] for c in new_rec]), jnp.stack([c[1] for c in new_rec]))
+        return x, (rec_c, kv_c)
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16, mode="sliced"):
+        rec_conv, rec_h = rglru_mod.init_rec_state(cfg, batch, n_rec)
+        kv_len = min(max_len, w) if mode == "decode" else max_len
+        kv_shape = (batch, kv_len, cfg.n_kv_heads, cfg.hd)
+        kv = (jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype))
+        per_block = ((rec_conv, rec_h), kv)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (count,) + a.shape),
+                            per_block)
+
+    def init_params(key):
+        return _stack_init(init_one, key, count)
+
+    return BlockGroup(name, count, full, sliced, decode, init_cache,
+                      sliced_dyn=sliced_dyn), init_params
+
+
+_GROUP_MAKERS = {
+    "dense": _make_dense_group,
+    "moe": _make_moe_group,
+    "ssm": _make_ssm_group,
+    "rec": _make_rec_group,
+    "super": _make_super_group,
+}
+
+
+# ---------------------------------------------------------------------------
+# decoder-only builder (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+
+    group_defs = _dense_like_groups(cfg)
+    groups, inits = [], {}
+    for name, count, kind in group_defs:
+        g, init_p = _GROUP_MAKERS[kind](cfg, name, count)
+        groups.append(g)
+        inits[name] = init_p
+
+    def init(rng):
+        ks = jax.random.split(rng, len(inits) + 2)
+        params: Params = {"groups": {}}
+        specs: Params = {"groups": {}}
+        params["embed"] = embed_init(ks[0], (cfg.vocab_size, cfg.d_model))
+        specs["embed"] = ("vocab", "embed")
+        for i, (name, init_p) in enumerate(inits.items()):
+            params["groups"][name], specs["groups"][name] = init_p(ks[i + 1])
+        params["final_ln"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        specs["final_ln"] = (None,)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(ks[-1], (cfg.d_model, cfg.vocab_size))
+            specs["lm_head"] = ("embed", "vocab")
+        return params, specs
+
+    def _head_weight(params):
+        return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    def embed(params, batch, ctx: int = 0):
+        x = params["embed"].astype(cfg.dtype)[batch["tokens"]]
+        if cfg.family == "vlm" and ctx == 0:
+            # patch embeddings (stubbed CLIP frontend) prefix the token stream
+            x = jnp.concatenate([batch["patch_embeds"].astype(cfg.dtype), x], axis=1)
+        return constrain_acts(x)
+
+    def head(params, x):
+        x = rms_norm(x, params["final_ln"])
+        return (x @ _head_weight(params).astype(x.dtype)).astype(jnp.float32)
+
+    def model_forward(params, batch):
+        x = embed(params, batch, 0)
+        x = apply_groups_full(model, params, x)
+        return head(params, x)
+
+    def head_loss(params, x, labels):
+        x = constrain_acts(rms_norm(x, params["final_ln"]))
+        if cfg.family == "vlm":
+            # only text positions carry LM loss; strip patch prefix
+            x = x[:, cfg.n_patches:, :]
+        return chunked_xent(x, _head_weight(params), labels)
+
+    def loss(params, batch):
+        x = embed(params, batch, 0)
+        x = apply_groups_full(model, params, x)
+        return head_loss(params, x, batch["labels"])
+
+    def init_caches(batch, max_len, dtype=jnp.bfloat16, mode="sliced"):
+        return [g.init_cache(batch, max_len, dtype, mode=mode) for g in groups]
+
+    def prefill(params, batch, max_len):
+        caches = init_caches(batch["tokens"].shape[0], max_len,
+                             dtype=cfg.dtype if cfg.dtype != jnp.float32
+                             else jnp.float32)
+        x = embed(params, batch, 0)
+        x, caches = apply_groups_sliced(model, params, x, caches, 0)
+        logits = head(params, x[:, -1:, :])
+        return logits, caches
+
+    def decode_step(params, caches, batch, pos):
+        x = embed(params, batch, ctx=1)   # ctx!=0 -> no vlm prefix
+        x, caches = apply_groups_decode(model, params, x, caches, pos)
+        return head(params, x), caches
+
+    model = Model(cfg, groups, init, embed, head, loss, model_forward,
+                  prefill, decode_step, init_caches, head_loss)
+    return model
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder builder (whisper backbone; frontend stubbed)
+# ---------------------------------------------------------------------------
+def _init_dec_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p_self, s_self = attn_mod.init_attn(k1, cfg)
+    p_cross, s_cross = attn_mod.init_attn(k2, cfg)
+    p_ffn, s_ffn = layers_mod.init_ffn(k3, cfg)
+    zeros = lambda: jnp.zeros((cfg.d_model,), jnp.float32)
+    p = {"self": p_self, "cross": p_cross, "ffn": p_ffn,
+         "ln_self": zeros(), "ln_cross": zeros(), "ln_ffn": zeros()}
+    s = {"self": s_self, "cross": s_cross, "ffn": s_ffn,
+         "ln_self": (None,), "ln_cross": (None,), "ln_ffn": (None,)}
+    return p, s
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+
+    # --- encoder group (bidirectional; NOT token-sliceable) ---
+    def enc_full(bp, x):
+        return layers_mod.dense_block_full(bp, cfg, x, causal=False)
+
+    enc_group = BlockGroup(
+        "enc", n_enc, enc_full, None, None,
+        lambda batch, max_len, dtype=jnp.bfloat16, mode="sliced": (), causal=False)
+
+    # --- decoder group: self (causal, cached) + cross (precomputed enc KV) ---
+    def dec_full(bp, x_and_enc):
+        x, enc_kv = x_and_enc
+        ek, ev = enc_kv
+        x = x + attn_mod.attn_full(bp["self"], cfg, rms_norm(x, bp["ln_self"]))
+        x = x + attn_mod.attn_cross(bp["cross"], cfg, rms_norm(x, bp["ln_cross"]), ek, ev)
+        x = x + layers_mod.ffn(bp["ffn"], rms_norm(x, bp["ln_ffn"]))
+        return (x, enc_kv)
+
+    def dec_sliced(bp, x_and_enc, cache, ctx):
+        x, enc_kv = x_and_enc
+        ek, ev = enc_kv
+        a, cache = attn_mod.attn_sliced(bp["self"], cfg, rms_norm(x, bp["ln_self"]),
+                                        cache, ctx)
+        x = x + a
+        x = x + attn_mod.attn_cross(bp["cross"], cfg, rms_norm(x, bp["ln_cross"]), ek, ev)
+        x = x + layers_mod.ffn(bp["ffn"], rms_norm(x, bp["ln_ffn"]))
+        return (x, enc_kv), cache
+
+    def dec_decode(bp, x_and_enc, cache, pos):
+        x, enc_kv = x_and_enc
+        ek, ev = enc_kv
+        a, cache = attn_mod.attn_decode(bp["self"], cfg, rms_norm(x, bp["ln_self"]),
+                                        cache, pos)
+        x = x + a
+        x = x + attn_mod.attn_cross(bp["cross"], cfg, rms_norm(x, bp["ln_cross"]), ek, ev)
+        x = x + layers_mod.ffn(bp["ffn"], rms_norm(x, bp["ln_ffn"]))
+        return (x, enc_kv), cache
+
+    def dec_init_cache(batch, max_len, dtype=jnp.bfloat16, mode="sliced"):
+        shape = (n_dec, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+    dec_group = BlockGroup("dec", n_dec, dec_full, dec_sliced, dec_decode,
+                           dec_init_cache)
+    groups = [enc_group, dec_group]
+
+    def init(rng):
+        ks = jax.random.split(rng, 5)
+        p_enc, s_enc = _stack_init(lambda k: layers_mod.init_dense_block(k, cfg),
+                                   ks[0], n_enc)
+        p_dec, s_dec = _stack_init(lambda k: _init_dec_block(k, cfg), ks[1], n_dec)
+        params = {
+            "groups": {"enc": p_enc, "dec": p_dec},
+            "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model)),
+            "enc_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "lm_head": embed_init(ks[3], (cfg.d_model, cfg.vocab_size)),
+        }
+        specs = {
+            "groups": {"enc": s_enc, "dec": s_dec},
+            "embed": ("vocab", "embed"),
+            "enc_ln": (None,), "final_ln": (None,),
+            "lm_head": ("embed", "vocab"),
+        }
+        return params, specs
+
+    def encode(params, frames):
+        """frames: (B, S_enc, d_model) precomputed conv-frontend embeddings (stub)."""
+        x = frames.astype(cfg.dtype)
+        def body(h, bp_l):
+            return enc_full(bp_l, h), None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["groups"]["enc"])
+        x = rms_norm(x, params["enc_ln"])
+        # per-decoder-layer cross K/V, stacked on the layer axis
+        def kv_one(bp_l):
+            return attn_mod.cross_kv(bp_l["cross"], cfg, x)
+        return jax.vmap(kv_one)(params["groups"]["dec"])
+
+    def embed(params, batch, ctx: int = 0):
+        return constrain_acts(params["embed"].astype(cfg.dtype)[batch["tokens"]])
+
+    def head(params, x):
+        x = rms_norm(x, params["final_ln"])
+        return (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+
+    def _run_dec_full(params, x, enc_kv):
+        def body(h, inp):
+            bp_l, ekv_l = inp
+            (h2, _) = dec_full(bp_l, (h, ekv_l))
+            return h2, None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, (params["groups"]["dec"], enc_kv))
+        return x
+
+    def model_forward(params, batch):
+        enc_kv = encode(params, batch["frames"])
+        x = embed(params, batch)
+        x = _run_dec_full(params, x, enc_kv)
+        return head(params, x)
+
+    def head_loss(params, x, labels):
+        x = constrain_acts(rms_norm(x, params["final_ln"]))
+        return chunked_xent(x, params["lm_head"], labels)
+
+    def loss(params, batch):
+        enc_kv = encode(params, batch["frames"])
+        x = embed(params, batch)
+        x = _run_dec_full(params, x, enc_kv)
+        return head_loss(params, x, batch["labels"])
+
+    def init_caches(batch, max_len, dtype=jnp.bfloat16, mode="sliced"):
+        # slot 0 holds the precomputed cross-attention K/V (filled by prefill)
+        kv_shape = (n_dec, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        enc_kv = (jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype))
+        return [enc_kv, dec_init_cache(batch, max_len, dtype, mode=mode)]
+
+    def prefill(params, batch, max_len):
+        enc_kv = encode(params, batch["frames"])
+        caches = init_caches(batch["tokens"].shape[0], max_len, dtype=cfg.dtype)
+        x = embed(params, batch)
+        def body(h, inp):
+            bp_l, ekv_l, c_l = inp
+            (h2, _), c_l = dec_sliced(bp_l, (h, ekv_l), c_l, 0)
+            return h2, c_l
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, dec_cache = jax.lax.scan(body_fn, x, (params["groups"]["dec"], enc_kv,
+                                                 caches[1]))
+        logits = head(params, x[:, -1:, :])
+        return logits, [enc_kv, dec_cache]
+
+    def decode_step(params, caches, batch, pos):
+        enc_kv, dec_cache = caches
+        x = embed(params, batch)
+        def body(h, inp):
+            bp_l, ekv_l, c_l = inp
+            (h2, _), c_l = dec_decode(bp_l, (h, ekv_l), c_l, pos)
+            return h2, c_l
+        x, dec_cache = jax.lax.scan(body, x, (params["groups"]["dec"], enc_kv,
+                                              dec_cache))
+        return head(params, x), [enc_kv, dec_cache]
+
+    model = Model(cfg, groups, init, embed, head, loss, model_forward,
+                  prefill, decode_step, init_caches, head_loss)
+    model.encode = encode
+    return model

@@ -1,0 +1,89 @@
+"""RecurrentGemma / Griffin hybrid blocks: RG-LRU recurrent block + local
+attention, in a repeating (rec, rec, attn) pattern.
+
+The RG-LRU recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t) is a
+linear scan — we run it with ``jax.lax.associative_scan`` (log-depth, maps
+well to TPU) and carry the state across TeraPipe slices, so slicing is exact
+(like the SSM family).  Local attention uses a bounded window, so the
+TeraPipe context cost term saturates at ``window`` (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rms_norm
+from .ssm import _causal_conv
+
+_C = 8.0  # RG-LRU temperature constant (Griffin paper)
+
+
+def init_rec_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_x": dense_init(ks[0], (d, d)),          # recurrent branch in-proj
+        "w_y": dense_init(ks[1], (d, d)),          # gate branch
+        "conv_w": dense_init(ks[2], (cfg.rglru_conv, d)) * 0.1,
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "w_a": dense_init(ks[3], (d, d)),          # recurrence gate r_t
+        "b_a": jnp.zeros((d,), jnp.float32),
+        "w_i": dense_init(ks[4], (d, d)),          # input gate i_t
+        "b_i": jnp.zeros((d,), jnp.float32),
+        "lam": jnp.full((d,), 0.5, jnp.float32),   # Λ (softplus -> decay rate)
+        "w_out": dense_init(ks[5], (d, d)),
+    }
+    s = {
+        "ln": (None,), "w_x": ("embed", "ff"), "w_y": ("embed", "ff"),
+        "conv_w": (None, "ff"), "conv_b": ("ff",),
+        "w_a": ("embed", "ff"), "b_a": ("ff",), "w_i": ("embed", "ff"),
+        "b_i": ("ff",), "lam": ("ff",), "w_out": ("ff", "embed"),
+    }
+    return p, s
+
+
+def _rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: Optional[jnp.ndarray]):
+    """h_t = a_t h_{t-1} + b_t over axis 1.  a, b: (B, L, D); h0: (B, D)|None."""
+    def combine(lhs, rhs):
+        (a1, b1), (a2, b2) = lhs, rhs
+        return a2 * a1, a2 * b1 + b2
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = Bc if h0 is None else A * h0[:, None, :] + Bc
+    return h
+
+
+def rec_block(p, cfg: ModelConfig, x: jnp.ndarray, state=None):
+    """Full/sliced forward.  x (b, L, d); state = (conv_state, h0) | None."""
+    h = rms_norm(x, p["ln"])
+    xr = h @ p["w_x"].astype(h.dtype)
+    gate = jax.nn.gelu(h @ p["w_y"].astype(h.dtype))
+    conv_state = None if state is None else state[0]
+    h0 = None if state is None else state[1]
+    xr, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"] + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    hs = _rglru_scan(a, b, None if h0 is None else h0.astype(jnp.float32))
+    new_h = hs[:, -1, :]
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    if cfg.tp_axis is not None:
+        y = jax.lax.psum(y, cfg.tp_axis)
+    return x + y, (new_conv, new_h)
+
+
+def rec_block_decode(p, cfg: ModelConfig, x_tok: jnp.ndarray, state):
+    """Single-token step.  x_tok (b, 1, d); state = (conv_state, h)."""
+    out, (new_conv, new_h) = rec_block(p, cfg, x_tok, state)
+    return out, (new_conv, new_h)
+
+
+def init_rec_state(cfg: ModelConfig, batch: int, n_layers: int):
+    conv = jnp.zeros((n_layers, batch, cfg.rglru_conv - 1, cfg.d_model), jnp.float32)
+    h = jnp.zeros((n_layers, batch, cfg.d_model), jnp.float32)
+    return conv, h

@@ -1,0 +1,194 @@
+"""Mamba-2 (SSD, state-space duality) block — pure JAX, chunked algorithm.
+
+The chunked SSD recurrence *is* token slicing: each chunk consumes a carried
+recurrent state and emits an updated one.  TeraPipe's sliced execution for
+this family therefore carries (conv_state, ssm_state) between slices instead
+of a KV cache, and the per-slice cost is ~linear in slice length (the DP's
+context term a2/a3 ≈ 0, see DESIGN.md §5).
+
+Shapes: x (B, L, H, P) heads×headdim; B/C (B, L, N) with ngroups=1; A (H,).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rms_norm
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Lc) log-decays -> (..., Lc, Lc) with [t, s] = sum_{r=s+1..t} a_r
+    for s <= t, -inf otherwise."""
+    lc = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]          # [t,s] = cum_t - cum_s
+    mask = jnp.arange(lc)[:, None] >= jnp.arange(lc)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (b, L, H, P) fp; dt: (b, L, H) fp (post-softplus); A: (H,) (negative)
+    B, C: (b, L, N); D: (H,) skip.
+    Returns (y (b, L, H, P), final_state (b, H, P, N)).
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    f32 = jnp.float32
+    xr = x.reshape(b, nc, chunk, H, P).astype(f32)
+    dtr = dt.reshape(b, nc, chunk, H).astype(f32)
+    Br = B.reshape(b, nc, chunk, N).astype(f32)
+    Cr = C.reshape(b, nc, chunk, N).astype(f32)
+    a = dtr * A.astype(f32)[None, None, None, :]           # (b, nc, Lc, H) log decay
+    a_h = jnp.moveaxis(a, -1, -2)                          # (b, nc, H, Lc)
+    cum = jnp.cumsum(a_h, axis=-1)                         # (b, nc, H, Lc)
+    seg = jnp.exp(_segsum(a_h))                            # (b, nc, H, Lc, Lc)
+
+    xdt = xr * dtr[..., None]                              # x̄ = dt * x
+    # intra-chunk (quadratic, "attention-like" term)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cr, Br)             # (b, nc, Lc, Lc)
+    y_intra = jnp.einsum("bcts,bchts,bcshp->bcthp", cb, seg, xdt)
+
+    # per-chunk end state contribution: sum_s exp(cum_end - cum_s) B_s x̄_s
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)            # (b, nc, H, Lc)
+    chunk_state = jnp.einsum("bchs,bcsn,bcshp->bchpn", decay_to_end, Br, xdt)
+    chunk_decay = jnp.exp(cum[..., -1])                    # (b, nc, H)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, H, P, N), f32)
+
+    def step(S, inp):
+        cstate, cdecay = inp                               # (b,H,P,N), (b,H)
+        S_in = S                                           # state entering this chunk
+        S = S * cdecay[..., None, None] + cstate
+        return S, S_in
+
+    states_seq = (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    final_state, S_ins = jax.lax.scan(step, initial_state.astype(f32), states_seq)
+    S_ins = jnp.moveaxis(S_ins, 0, 1)                      # (b, nc, H, P, N)
+
+    # inter-chunk: y_t += C_t · (exp(cum_t) * S_in)
+    y_inter = jnp.einsum("bctn,bcht,bchpn->bcthp", Cr, jnp.exp(cum), S_ins)
+    y = y_intra + y_inter + xr * D.astype(f32)[None, None, None, :, None]
+    return y.reshape(b, L, H, P).astype(x.dtype), final_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    p = {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * N + H)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim)) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, d)),
+        "ln": jnp.zeros((d,), jnp.float32),
+    }
+    s = {
+        "in_proj": ("embed", "ff"), "conv_w": (None, "ff"), "conv_b": ("ff",),
+        "A_log": ("heads",), "D": ("heads",), "dt_bias": ("heads",),
+        "norm": ("ff",), "out_proj": ("ff", "embed"), "ln": (None,),
+    }
+    return p, s
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    H = d_inner // cfg.ssm_head_dim
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * N], axis=-1)
+    return z, xbc, dt                                       # (…,d_inner), (…,d_inner+2N), (…,H)
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  xbc (b, L, Cc); w (k, Cc).
+    conv_state (b, k-1, Cc) = trailing inputs from the previous slice."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                # (b, L+k-1, Cc)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :].astype(xbc.dtype)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return jax.nn.silu(out + bias.astype(xbc.dtype)), new_state
+
+
+def mamba2_block(p, cfg: ModelConfig, x: jnp.ndarray, state=None):
+    """Full/sliced forward.  x (b, L, d).  state = (conv_state, ssm_state) | None.
+    Returns (y, new_state)."""
+    assert cfg.tp_axis is None, "mamba2 blocks do not support manual TP (DESIGN.md)"
+    d_inner = cfg.ssm_expand * cfg.d_model
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    H = d_inner // P
+    h = rms_norm(x, p["ln"])
+    proj = h @ p["in_proj"].astype(h.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    conv_state = None if state is None else state[0]
+    ssm_state = None if state is None else state[1]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    b, L, _ = xs.shape
+    xs = xs.reshape(b, L, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    chunk = min(cfg.ssm_chunk, L)
+    while L % chunk:                       # largest divisor of L <= ssm_chunk
+        chunk -= 1
+    y, new_ssm = ssd_chunked(xs, dt, A, B, C, p["D"], chunk,
+                             initial_state=ssm_state)
+    y = y.reshape(b, L, d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"])
+    out = y @ p["out_proj"].astype(y.dtype)
+    return x + out, (new_conv, new_ssm)
+
+
+def mamba2_decode(p, cfg: ModelConfig, x_tok: jnp.ndarray, state):
+    """Single-token recurrent step.  x_tok (b, 1, d)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    H = d_inner // P
+    conv_state, ssm_state = state
+    h = rms_norm(x_tok, p["ln"])
+    proj = h @ p["in_proj"].astype(h.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    b = xs.shape[0]
+    xs = xs.reshape(b, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])   # (b, H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                                   # (b, H)
+    Bf, Cf = B[:, 0].astype(jnp.float32), C[:, 0].astype(jnp.float32)  # (b, N)
+    new_ssm = (ssm_state * decay[..., None, None]
+               + jnp.einsum("bhp,bn,bh->bhpn", xs, Bf, dt))
+    y = jnp.einsum("bn,bhpn->bhp", Cf, new_ssm) + xs * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x_tok.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"])
+    return x_tok + y @ p["out_proj"].astype(y.dtype), (new_conv, new_ssm)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    conv = jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, d_inner + 2 * cfg.ssm_state),
+                     jnp.float32)
+    ssm = jnp.zeros((n_layers, batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    return conv, ssm

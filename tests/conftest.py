@@ -1,0 +1,6 @@
+import os
+import sys
+from pathlib import Path
+
+# tests see ONE CPU device (dry-run device forcing must stay out of here)
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
