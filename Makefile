@@ -1,0 +1,20 @@
+# Tier-1 verification and common dev entry points.
+PY ?= python
+
+.PHONY: test test-full bench-dp dryrun-executors
+
+# tier-1 suite (the ROADMAP invocation, pinned here)
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# no fail-fast; full report
+test-full:
+	PYTHONPATH=src $(PY) -m pytest -q
+
+bench-dp:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
+
+# rolled vs unrolled tick-executor trace/lower wall-time report
+dryrun-executors:
+	PYTHONPATH=src $(PY) -m repro.launch.dryrun --compare-executors \
+	    --arch gpt3-1b --shape train_4k --terapipe-pipe 8 --terapipe-slices 16

@@ -1,6 +1,8 @@
 """DP scheduler runtime benchmark (the paper: 'finishes within a minute')."""
 import time
 
+import numpy as np
+
 from benchmarks.common import terapipe_scheme
 from benchmarks.paper_settings import TABLE1
 
@@ -13,3 +15,35 @@ def run(emit):
         dt = time.perf_counter() - t0
         emit(f"dp/setting{idx}_{s.model}", dt * 1e6,
              f"ticks={scheme.n_ticks}")
+    _cost_matrix_micro(emit)
+
+
+def _cost_matrix_micro(emit):
+    """Vectorized cost-matrix fill vs the scalar-loop fallback (65k+ cells at
+    L=2048, g=8).  Asserts the broadcast path actually engages and wins."""
+    from repro.configs import get_config
+    from repro.core.cost_model import AnalyticCostModel, V100_AWS
+    from repro.core.dp import _cost_matrix
+
+    cm = AnalyticCostModel(get_config("gpt3-1b"), V100_AWS, layers_per_stage=2)
+    L, g = 2048, 8
+
+    def scalar_only(l, c):          # defeats the array fast path
+        if getattr(l, "ndim", 0):
+            raise TypeError("scalar only")
+        return cm(l, c)
+
+    t0 = time.perf_counter()
+    T_vec = _cost_matrix(cm, L, g)
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    T_loop = _cost_matrix(scalar_only, L, g)
+    t_loop = time.perf_counter() - t0
+
+    mask = np.isfinite(T_loop)
+    assert (np.isfinite(T_vec) == mask).all()
+    np.testing.assert_allclose(T_vec[mask], T_loop[mask], rtol=1e-12)
+    assert t_vec * 5 < t_loop, \
+        f"vectorized fill not engaging: {t_vec:.4f}s vs loop {t_loop:.4f}s"
+    emit("dp/cost_matrix_vectorized_L2048_g8", t_vec * 1e6,
+         f"speedup={t_loop / t_vec:.0f}x")

@@ -3,16 +3,20 @@ wall-clock benchmark of the full stack (data -> jit step -> optimizer)."""
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh, use_mesh
 from repro.configs import get_config
 from repro.data.pipeline import DataPipeline, SyntheticSource
 from repro.launch.steps import make_train_step
 from repro.models import build_model
+from repro.models.common import ModelConfig
 from repro.optim.adamw import adamw
 
 
 def run(emit):
+    _executor_trace_bench(emit)
     for arch in ("qwen3-0.6b", "mamba2-2.7b", "deepseek-moe-16b"):
         cfg = get_config(arch, smoke=True)
         model = build_model(cfg)
@@ -32,3 +36,34 @@ def run(emit):
         dt = (time.perf_counter() - t0) / n
         emit(f"train/{arch}_smoke_step", dt * 1e6,
              f"tok_per_s={B * S / dt:,.0f}_loss={float(loss):.3f}")
+
+
+def _executor_trace_bench(emit):
+    """Trace cost of the pipelined loss: rolled lax.scan executor vs the
+    unrolled escape hatch at M=16 (iteration-speed metric; runs on 1 CPU
+    device with a trivial (1, 1) mesh — trace cost does not need devices)."""
+    from repro.core.pipeline import TeraPipeConfig, make_terapipe_loss
+    cfg = ModelConfig(name="bench", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
+                      dtype=jnp.float32, remat=False)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    B, M = 2, 16
+    S = 16 * M
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    mesh = make_mesh((1, 1), ("data", "pipe"))
+    times = {}
+    for name, unroll in (("rolled", False), ("unrolled", True)):
+        tcfg = TeraPipeConfig(n_token_slices=M, n_microbatches=1,
+                              data_axes=("data",), cache_dtype=jnp.float32,
+                              unroll=unroll)
+        with use_mesh(mesh):
+            lf, _ = make_terapipe_loss(model, specs, mesh, tcfg, S, B)
+            t0 = time.perf_counter()
+            jax.make_jaxpr(lf)(params, batch)
+            times[name] = time.perf_counter() - t0
+        emit(f"train/pipeline_trace_M16_{name}", times[name] * 1e6)
+    emit("train/pipeline_trace_M16_speedup",
+         times["unrolled"] / times["rolled"] * 100,
+         "unrolled_over_rolled_pct")

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.compat import make_mesh, use_mesh
 from repro.core.pipeline import TeraPipeConfig, make_terapipe_loss
 from repro.data.pipeline import DataPipeline, SyntheticSource
 from repro.models import build_model
@@ -54,15 +55,14 @@ def main():
 
     n_dev = len(jax.devices())
     pipe = min(4, n_dev)
-    mesh = jax.make_mesh((n_dev // pipe, pipe), ("data", "pipe"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((n_dev // pipe, pipe), ("data", "pipe"))
     tcfg = TeraPipeConfig(n_token_slices=args.slices, n_microbatches=2,
                           data_axes=("data",))
     opt = adamw(cosine_schedule(3e-4, 20, args.steps))
     opt_state = opt.init(params)
     ckpt = CheckpointManager(args.ckpt, keep=2)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         loss_fn, _ = make_terapipe_loss(model, specs, mesh, tcfg,
                                         args.seq, args.batch)
 

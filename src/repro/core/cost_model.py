@@ -76,14 +76,15 @@ def layer_matmul_flops(cfg: ModelConfig) -> float:
 
 
 def attention_context_flops(cfg: ModelConfig, l: int, ctx: int) -> float:
-    """Attention score+value FLOPs for a slice of l tokens at context ctx."""
+    """Attention score+value FLOPs for a slice of l tokens at context ctx.
+    ufunc-friendly: l/ctx may be scalars or broadcastable arrays."""
     if cfg.family == "ssm":
         return 0.0
     d_attn = cfg.n_heads * cfg.hd
     eff_ctx = ctx
     avg_span = eff_ctx + (l + 1) / 2.0
     if cfg.window:
-        avg_span = min(avg_span, float(cfg.window))
+        avg_span = np.minimum(avg_span, float(cfg.window))
     per_layer = 4.0 * d_attn * l * avg_span     # QK^T + PV, fwd
     if cfg.family == "hybrid":
         per_layer /= len(cfg.block_pattern)     # only 1/3 of layers attend
@@ -113,13 +114,17 @@ class AnalyticCostModel(CostModel):
         self.tp = tp_degree
         self.bwd_mult = 3.0 if include_backward else 1.0   # bwd ≈ 2x fwd
         self.slowdown = stage_slowdown
-        self._matmul_per_tok = layer_matmul_flops(cfg) * layers_per_stage
+        # float: keeps the array path in t_fwd out of int64 accumulation
+        self._matmul_per_tok = float(layer_matmul_flops(cfg) * layers_per_stage)
 
     def t_fwd(self, l: int, ctx: int) -> float:
+        """Scalar or elementwise-array evaluation (the DP's cost-matrix fill
+        calls this once with the whole (l, ctx) grid)."""
         hw = self.hw
-        l_eff = max(l, hw.occupancy_floor)     # Fig. 3 flat region
-        flops = self.batch * l_eff * self._matmul_per_tok
-        flops += self.batch * attention_context_flops(self.cfg, l_eff, ctx) * self.layers
+        l_eff = np.maximum(l, hw.occupancy_floor)   # Fig. 3 flat region
+        flops = (self.batch * l_eff * self._matmul_per_tok
+                 + self.batch * attention_context_flops(self.cfg, l_eff, ctx)
+                 * self.layers)
         t_compute = flops * self.bwd_mult / (self.tp * hw.peak_flops * hw.efficiency)
         # stage boundary transfer: activations of the slice (bf16)
         bytes_x = self.batch * l * self.cfg.d_model * 2

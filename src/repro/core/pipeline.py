@@ -20,6 +20,37 @@ mesh axis: weights arrive head/ff/expert-sharded and the block fns psum
 partial outputs (see models/* with cfg.tp_axis).
 
 GPipe (the paper's baseline) is the D>1, M=1 special case.
+
+Executor design (rolled tick loop)
+----------------------------------
+
+The tick loop is ROLLED with ``jax.lax.scan`` over the tick index, so XLA
+traces and compiles ONE tick program regardless of ``D*M + K - 1`` — the
+large-M schemes the DP planner (§3.3) emits stay cheap to trace/compile.
+
+* Carry layout: ``(x_prev, caches, outbuf)`` —
+  - ``x_prev``  (mb, l, d)        activation received from the previous
+                                  stage at the end of the last tick;
+  - ``caches``  per-layer pytree  KV / SSM / LRU state of the current
+                                  microbatch prefix (stacked on bps);
+  - ``outbuf``  (D*M, mb, l, d)   per-work-item output ring written by the
+                                  last stage (other stages write garbage
+                                  that reassembly never reads).
+* The work item ``i = t - k_rank`` and its ``(mb_idx, sl_idx, ctx)`` are
+  computed from the traced tick index; non-uniform slice offsets come from
+  ``starts`` as a captured device array indexed with ``jnp.take``.
+* Double-buffered send/recv: the ``ppermute`` on ``x_out`` is issued as soon
+  as the stage output exists, BEFORE the outbuf write (and, with
+  ``skip_bubbles=False``, the cache merge) — those consume the previous
+  buffer generation, so XLA's async collective-permute-start/-done pair
+  overlaps the wire transfer with the trailing per-tick bookkeeping.
+* Requirement on block fns: shape-stable across ticks (every slice runs in
+  an ``l_max``-padded buffer; ``ctx`` is traced, so attention uses the
+  ``sliced_dyn`` dynamic-slice path).
+
+``TeraPipeConfig.unroll=True`` is the escape hatch: the SAME tick body is
+Python-unrolled (one jaxpr copy per tick) for differential testing and for
+inspecting a single tick's HLO.
 """
 from __future__ import annotations
 
@@ -31,6 +62,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as compat_shard_map
 from repro.models import Model, build_model
 from repro.models.common import ModelConfig
 from repro.models.lm import _scan_full
@@ -57,6 +89,10 @@ class TeraPipeConfig:
     # compute via lax.cond — at runtime an idle device runs the cheap branch
     # instead of masked garbage compute.  Disable only for debugging.
     skip_bubbles: bool = True
+    # Python-unroll the tick loop (one jaxpr copy per tick) instead of the
+    # rolled lax.scan executor.  Trace/compile cost grows with D*M + K - 1;
+    # differential-testing / HLO-inspection escape hatch only.
+    unroll: bool = False
 
 
 def _group_split(model: Model):
@@ -189,9 +225,10 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
             x, caches = jax.lax.scan(body_fn, x, (stage_params, caches))
             return x, caches
 
-        x_prev = jnp.zeros((mb_local, l, d_model), cfg.dtype)
-        outbuf = jnp.zeros((DM, mb_local, l, d_model), cfg.dtype)
-        for t in range(ticks):
+        def tick(carry, t):
+            """One pipeline tick.  ``t`` is traced — the body is shape-stable
+            in the tick index, so it traces ONCE under the rolled executor."""
+            x_prev, caches, outbuf = carry
             i = t - k_rank                                   # work item id
             valid = (i >= 0) & (i < DM)
             i_c = jnp.clip(i, 0, DM - 1)
@@ -221,16 +258,30 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
                     lambda new, old: jnp.where(
                         jnp.reshape(valid, (1,) * new.ndim), new, old),
                     caches_new, caches)
+            # double buffer: issue the send/recv on x_out FIRST — the outbuf
+            # write below only reads x_out, so the async collective-permute
+            # overlaps the trailing per-tick bookkeeping on the compute stream
+            x_next = jax.lax.ppermute(
+                x_out, tcfg.pipe_axis, [(j, (j + 1) % K) for j in range(K)])
             # always-write (clamped): only the last stage's buffer is read,
             # and for it every valid item overwrites any earlier garbage
             outbuf = jax.lax.dynamic_update_slice(
                 outbuf, x_out[None], (i_c, 0, 0, 0))
-            x_prev = jax.lax.ppermute(
-                x_out, tcfg.pipe_axis, [(j, (j + 1) % K) for j in range(K)])
-        return outbuf
+            return (x_next, caches, outbuf), None
+
+        carry = (jnp.zeros((mb_local, l, d_model), cfg.dtype),   # x_prev
+                 caches,
+                 jnp.zeros((DM, mb_local, l, d_model), cfg.dtype))  # outbuf
+        if tcfg.unroll:
+            for t in range(ticks):               # escape hatch: jaxpr ~ O(ticks)
+                carry, _ = tick(carry, jnp.int32(t))
+        else:
+            carry, _ = jax.lax.scan(tick, carry,
+                                    jnp.arange(ticks, dtype=jnp.int32))
+        return carry[2]
 
     out_specs = P(tcfg.pipe_axis, tcfg.data_axes, None, None)
-    shmap = jax.shard_map(
+    shmap = compat_shard_map(
         pipeline_body, mesh=mesh,
         in_specs=(stage_in_specs, x_spec),
         out_specs=out_specs, check_vma=False)
@@ -249,11 +300,13 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
         if n_pad:
             # zero blocks are exact identities (residual blocks, see DESIGN);
             # constrain the result straight to the pipe-sharded layout so the
-            # concat does not bounce through a replicated intermediate
+            # pad does not bounce through a replicated intermediate.  NB: must
+            # be jnp.pad, NOT concatenate-with-zeros — XLA mispartitions the
+            # concat feeding a shard_map operand on multi-axis meshes
+            # (data>1 x pipe, observed on jax 0.4.37: garbage stage params).
             stage_params = jax.tree.map(
                 lambda a, sp: jax.lax.with_sharding_constraint(
-                    jnp.concatenate(
-                        [a, jnp.zeros((n_pad,) + a.shape[1:], a.dtype)]),
+                    jnp.pad(a, ((0, n_pad),) + ((0, 0),) * (a.ndim - 1)),
                     NamedSharding(mesh, sp)),
                 stage_params, stage_in_specs)
 
@@ -310,10 +363,16 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
 
 def make_gpipe_loss(model: Model, specs, mesh: Mesh, *, n_microbatches: int,
                     pipe_axis="pipe", tp_axis=None, data_axes=("data",),
-                    seq_len: int, global_batch: int):
+                    seq_len: int, global_batch: int,
+                    cache_dtype: Any = jnp.bfloat16, skip_bubbles: bool = True,
+                    unroll: bool = False):
     """Microbatch-only pipelining (GPipe, the paper's baseline): D micro-
-    batches, a single token slice per sequence."""
+    batches, a single token slice per sequence.  ``cache_dtype`` /
+    ``skip_bubbles`` / ``unroll`` forward into the underlying TeraPipeConfig
+    so the baseline is controllable exactly like the TeraPipe executor."""
     tcfg = TeraPipeConfig(n_token_slices=1, n_microbatches=n_microbatches,
                           pipe_axis=pipe_axis, tp_axis=tp_axis,
-                          data_axes=tuple(data_axes))
+                          data_axes=tuple(data_axes),
+                          cache_dtype=cache_dtype, skip_bubbles=skip_bubbles,
+                          unroll=unroll)
     return make_terapipe_loss(model, specs, mesh, tcfg, seq_len, global_batch)

@@ -22,6 +22,9 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK_KV = 512
 NEG_INF = float("-inf")
 
+# renamed pltpu.TPUMemorySpace -> pltpu.MemorySpace across jax versions
+_MEMORY_SPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
 
 def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, s_scr,
                    acc_scr, *, blk_kv: int, scale: float):
@@ -85,7 +88,7 @@ def decode_attention_kernel(q, k, v, kv_len, *,
         functools.partial(_decode_kernel, blk_kv=blk_kv, scale=scale),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # kv_len
+            pl.BlockSpec(memory_space=_MEMORY_SPACE.SMEM),  # kv_len
             pl.BlockSpec((1, 1, 1, hd), lambda bi, hi, ki: (bi, 0, hi, 0)),
             # GQA: the kv-head block index is hq // rep — no repeat in HBM
             pl.BlockSpec((1, blk_kv, 1, hd),

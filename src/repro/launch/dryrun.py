@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import cost_analysis_dict, use_mesh
 from repro.configs import ARCHS, SHAPES, get_config, input_specs, skip_reason
 from repro.launch import hlo_analysis as ha
 from repro.launch import hlo_tripcount as hlo_trip
@@ -87,7 +88,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["compile_s"] = time.time() - t1
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         rec["memory"] = _mem_dict(mem)
         # XLA's cost_analysis does NOT multiply while-loop bodies by their
@@ -148,7 +149,7 @@ def _lower_gspmd(model, cfg, shape, multi_pod, param_dtype=None,
     if param_dtype == "bf16":
         param_dtype = jnp.bfloat16
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             opt = adamw(cosine_schedule(3e-4, 100, 10_000),
                         master_weights=param_dtype is not None)
@@ -181,7 +182,7 @@ def _lower_gspmd(model, cfg, shape, multi_pod, param_dtype=None,
 
 
 def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
-                    dp_plan: bool = False):
+                    dp_plan: bool = False, unroll: bool = False):
     from repro.core.pipeline import TeraPipeConfig, make_terapipe_loss
     from repro.launch.steps import abstract_init, abstract_opt_state
     from repro.optim.adamw import apply_updates
@@ -209,9 +210,9 @@ def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
                           n_microbatches=1,
                           pipe_axis="pipe",
                           tp_axis="tp" if tp > 1 else None,
-                          data_axes=daxes)
+                          data_axes=daxes, unroll=unroll)
     structs, specs = abstract_init(model)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         loss_fn, param_sh_fn = make_terapipe_loss(
             model, specs, mesh, tcfg, shape.seq_len, shape.global_batch)
         p_sh = param_sh_fn(specs)
@@ -230,6 +231,53 @@ def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
     return lowered, n_chips
 
 
+def compare_executors(arch: str, shape_name: str, *, terapipe_slices: int = 16,
+                      terapipe_pipe: int = 16, multi_pod: bool = False,
+                      do_compile: bool = False,
+                      out_dir: str = "experiments/dryrun") -> dict:
+    """Trace+lower (optionally compile) the terapipe train step with BOTH tick
+    executors and report wall-times.  The rolled lax.scan executor's trace
+    cost is O(1) in D*M; the unrolled escape hatch's grows linearly — at
+    D*M >= 16 rolled must win."""
+    shape = SHAPES[shape_name]
+    model = build_model(get_config(arch))
+    if model.n_blocks % terapipe_pipe:
+        # param_shardings pipe-shard the UNPADDED layer stack (ROADMAP open
+        # item) — snap to the largest pipe degree that divides both the layer
+        # count and the 16-wide model axis, so the default CLI invocation
+        # works for any arch (e.g. gpt3-1b's 24 layers with the default 16)
+        fixed = max(p for p in range(1, terapipe_pipe + 1)
+                    if model.n_blocks % p == 0 and 16 % p == 0)
+        print(f"[exec] pipe={terapipe_pipe} does not divide "
+              f"{model.n_blocks} layers; using pipe={fixed}", flush=True)
+        terapipe_pipe = fixed
+    rec = {"arch": arch, "shape": shape_name, "mode": "terapipe",
+           "n_slices": terapipe_slices, "pipe": terapipe_pipe,
+           "executors": {}}
+    for name, unroll in (("rolled", False), ("unrolled", True)):
+        t0 = time.time()
+        lowered, n_chips = _lower_terapipe(
+            model, shape, multi_pod, terapipe_slices, terapipe_pipe,
+            unroll=unroll)
+        cell = {"lower_s": time.time() - t0}
+        if do_compile:
+            t1 = time.time()
+            lowered.compile()
+            cell["compile_s"] = time.time() - t1
+        rec["executors"][name] = cell
+        print(f"[exec] {arch} {shape_name} M={terapipe_slices} {name}: "
+              + " ".join(f"{k}={v:.2f}s" for k, v in cell.items()),
+              flush=True)
+    r, u = (rec["executors"]["rolled"]["lower_s"],
+            rec["executors"]["unrolled"]["lower_s"])
+    rec["rolled_faster"] = bool(r < u)
+    rec["ok"] = True
+    print(f"[exec] rolled {'beats' if r < u else 'LOSES TO'} unrolled: "
+          f"{r:.2f}s vs {u:.2f}s (trace+lower, M={terapipe_slices})",
+          flush=True)
+    return _dump(rec, out_dir, f"{arch}_{shape_name}_executors")
+
+
 def _dump(rec: dict, out_dir: str, tag: str) -> dict:
     Path(out_dir).mkdir(parents=True, exist_ok=True)
     with open(Path(out_dir) / f"{tag}.json", "w") as f:
@@ -237,7 +285,10 @@ def _dump(rec: dict, out_dir: str, tag: str) -> dict:
     status = ("SKIP" if rec.get("skipped") else
               "OK" if rec.get("ok") else "FAIL")
     extra = ""
-    if rec.get("ok"):
+    if rec.get("ok") and "executors" in rec:
+        extra = " " + " ".join(
+            f"{n}_lower={c['lower_s']:.2f}s" for n, c in rec["executors"].items())
+    elif rec.get("ok"):
         m = rec["memory"]
         per_dev = (m["argument_size_in_bytes"] + m["temp_size_in_bytes"]
                    + m["output_size_in_bytes"] - m["alias_size_in_bytes"])
@@ -272,7 +323,20 @@ def main():
     ap.add_argument("--seqpar", action="store_true")
     ap.add_argument("--terapipe-dp", action="store_true")
     ap.add_argument("--variant", default="")
+    ap.add_argument("--compare-executors", action="store_true",
+                    help="report trace+lower wall-time for the rolled vs "
+                    "unrolled tick executor (terapipe mode)")
+    ap.add_argument("--compile", action="store_true",
+                    help="with --compare-executors: also compile both")
     args = ap.parse_args()
+
+    if args.compare_executors:
+        rec = compare_executors(
+            args.arch or "gpt3-1b", args.shape or "train_4k",
+            terapipe_slices=args.terapipe_slices,
+            terapipe_pipe=args.terapipe_pipe, multi_pod=args.multi_pod,
+            do_compile=args.compile, out_dir=args.out_dir)
+        sys.exit(0 if rec.get("rolled_faster") else 1)
 
     cells = []
     archs = ARCHS if (args.all or not args.arch) else [args.arch]

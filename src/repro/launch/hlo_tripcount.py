@@ -107,7 +107,9 @@ def _trip_count(cond_ops: List[Op], comps) -> int:
 
 
 def _dot_flops(op: Op, symtab: Dict[str, Tuple[str, Tuple[int, ...]]]) -> float:
-    m = re.match(r"%([\w\.\-]+)", op.rest)
+    # first operand ref; older XLA prints operands with their types
+    # ("dot(f32[8,16]{1,0} %lhs, ...)"), newer without ("dot(%lhs, ...)")
+    m = re.search(r"%([\w\.\-]+)", op.rest)
     if not m:
         return 0.0
     lhs = symtab.get(m.group(1))

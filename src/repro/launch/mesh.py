@@ -9,14 +9,15 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_terapipe_mesh(*, n_pipe: int = 16, multi_pod: bool = False) -> Mesh:
@@ -29,8 +30,7 @@ def make_terapipe_mesh(*, n_pipe: int = 16, multi_pod: bool = False) -> Mesh:
         shape, axes = (2, 16, n_pipe, tp), ("pod", "data", "pipe", "tp")
     else:
         shape, axes = (16, n_pipe, tp), ("data", "pipe", "tp")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes(mesh: Mesh):

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.compat import make_mesh, use_mesh
 from repro.configs import get_config
 from repro.data.pipeline import DataPipeline, SyntheticSource
 from repro.models import build_model
@@ -50,7 +51,8 @@ def build_loss(model, specs, mesh, args):
         n_token_slices=args.token_slices if args.mode == "terapipe" else 1,
         slice_lens=slice_lens,
         n_microbatches=args.microbatches,
-        pipe_axis="pipe", tp_axis=None, data_axes=("data",))
+        pipe_axis="pipe", tp_axis=None, data_axes=("data",),
+        unroll=args.unroll)
     loss_fn, _ = make_terapipe_loss(model, specs, mesh, tcfg, args.seq,
                                     args.batch)
     return loss_fn
@@ -72,6 +74,9 @@ def main(argv=None):
     ap.add_argument("--dp-plan", action="store_true",
                     help="plan slice lengths with the paper's DP (Alg. 1)")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unrolled tick loop (debug/differential testing; "
+                    "trace time grows with D*M)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -94,8 +99,7 @@ def main(argv=None):
     if args.mode in ("terapipe", "gpipe") and len(jax.devices()) > 1:
         n = len(jax.devices())
         pipe = min(4, n)
-        mesh = jax.make_mesh((n // pipe, pipe), ("data", "pipe"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((n // pipe, pipe), ("data", "pipe"))
     loss_fn = build_loss(model, specs, mesh, args)
 
     def train_step(params, opt_state, batch):
@@ -103,7 +107,7 @@ def main(argv=None):
         updates, opt_state = opt.update(grads, opt_state, params)
         return apply_updates(params, updates), opt_state, loss
 
-    ctx = jax.set_mesh(mesh) if mesh is not None else None
+    ctx = use_mesh(mesh) if mesh is not None else None
     if ctx is not None:
         ctx.__enter__()
     step_fn = jax.jit(train_step, donate_argnums=(0, 1))

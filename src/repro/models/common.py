@@ -102,8 +102,9 @@ def set_activation_sharding(axes, seq_axis=None):
 def constrain_acts(x: "jnp.ndarray") -> "jnp.ndarray":
     if _ACT_AXES is None or x.ndim < 2:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or any(a not in mesh.shape for a in _ACT_AXES):
+    from repro.compat import current_mesh
+    mesh = current_mesh()
+    if mesh is None or any(a not in mesh.shape for a in _ACT_AXES):
         return x
     total = 1
     for a in _ACT_AXES:

@@ -41,8 +41,12 @@ class BlockGroup(NamedTuple):
     decode: Callable     # (bp, x, cache, pos) -> (x, cache)
     init_cache: Callable # (batch, max_len, dtype) -> stacked cache pytree
     causal: bool = True  # token-sliceable (False => encoder-style group)
-    sliced_dyn: Callable = None  # like sliced but ctx may be traced (pipeline);
-                                 # None => sliced is already trace-safe in ctx
+    # Like ``sliced`` but ``ctx`` may be a TRACED scalar; None => sliced is
+    # already trace-safe in ctx.  Contract (rolled pipeline executor): the fn
+    # must be shape-stable across ticks — output/cache shapes and dtypes
+    # depend only on the (padded) input shapes, never on ctx's value, so one
+    # tick program serves every (microbatch, slice) work item under lax.scan.
+    sliced_dyn: Callable = None
 
 
 @dataclasses.dataclass

@@ -30,17 +30,23 @@ def _dispatch_axes(n_groups: int):
     """Data axes to shard_map the dispatch over, or None.
 
     Skips when: no activation sharding configured, group count not divisible,
-    or we are already inside a shard_map (axes Manual — TeraPipe pipeline)."""
+    we are already inside a shard_map (axes Manual — TeraPipe pipeline), or
+    jax is too old for the subset-axes shard_map API (the dispatch then runs
+    under plain GSPMD propagation — correct, just without the forced
+    group-parallel layout)."""
     from .common import _ACT_AXES
-    if not _ACT_AXES:
+    from repro.compat import HAS_SHARD_MAP, auto_axis_names, current_mesh
+    if not _ACT_AXES or not HAS_SHARD_MAP:
         return None
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = current_mesh()
+    if mesh is None:
         return None
-    types = dict(zip(mesh.axis_names, mesh.axis_types))
+    usable = auto_axis_names(mesh)
+    if usable is None:
+        return None
     total = 1
     for a in _ACT_AXES:
-        if a not in types or types[a] == jax.sharding.AxisType.Manual:
+        if a not in usable:
             return None
         total *= mesh.shape[a]
     if n_groups % total != 0:

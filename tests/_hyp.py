@@ -1,0 +1,24 @@
+"""hypothesis import guard (ISSUE 1): real hypothesis when installed
+(``pip install -e .[dev]``), otherwise stand-ins that collect the property
+tests as SKIPS — never as module collection errors — while the plain pytest
+tests in the same module keep running."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    class _Strategies:
+        """st.<anything>(...) placeholder; never executed (test is skipped)."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f

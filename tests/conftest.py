@@ -1,6 +1,53 @@
 import os
+import signal
 import sys
+import threading
 from pathlib import Path
+
+import pytest
 
 # tests see ONE CPU device (dry-run device forcing must stay out of here)
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# ---------------------------------------------------------------------------
+# Per-test hard timeout ("timeout" ini key, see pyproject.toml).  When the
+# pytest-timeout plugin is installed it owns the key; this SIGALRM fallback
+# covers bare environments so CPU-only runs cannot hang the suite.
+# ---------------------------------------------------------------------------
+try:
+    import pytest_timeout  # noqa: F401
+    _HAVE_TIMEOUT_PLUGIN = True
+except ImportError:
+    _HAVE_TIMEOUT_PLUGIN = False
+
+
+def pytest_addoption(parser):
+    if not _HAVE_TIMEOUT_PLUGIN:
+        parser.addini("timeout", "per-test hard timeout in seconds "
+                      "(SIGALRM fallback; 0 disables)", default="0")
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    limit = 0
+    if not _HAVE_TIMEOUT_PLUGIN:
+        try:
+            limit = int(float(item.config.getini("timeout") or 0))
+        except (ValueError, KeyError):
+            limit = 0
+    usable = (limit > 0 and hasattr(signal, "SIGALRM")
+              and threading.current_thread() is threading.main_thread())
+    if not usable:
+        return (yield)
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(f"test exceeded {limit}s hard timeout (conftest "
+                           "SIGALRM fallback)")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(limit)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

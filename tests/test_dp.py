@@ -1,7 +1,8 @@
 """DP scheduler (paper Algorithm 1 + §3.4) correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st   # hypothesis or skip-stub (tests/_hyp.py)
 
 from repro.core.dp import (brute_force_slicing, joint_batch_token,
                            optimal_slicing)
@@ -51,6 +52,19 @@ def test_epsilon_gap_bound():
     exact = optimal_slicing(t, L, K, eps=1e-12)
     approx = optimal_slicing(t, L, K, eps=eps)
     assert approx.latency <= exact.latency + K * eps + 1e-9
+
+
+def test_eps_coarser_than_cost_range_still_feasible():
+    """Regression: when eps exceeds the whole cost range (microsecond-scale
+    analytic costs, default eps=1e-4) the ε-grid used to collapse to ONE
+    infeasible t_max candidate and the DP returned no slices (crashing
+    train --dp-plan).  The max achievable value must stay a candidate."""
+    cm = AnalyticCostModel(get_config("qwen3-0.6b", smoke=True), TPU_V5E,
+                           layers_per_stage=2)
+    dp = optimal_slicing(cm, 64, 4, granularity=4)   # costs span ~1e-7 s
+    assert dp.slices, dp
+    assert sum(dp.slices) == 64
+    assert np.isfinite(dp.latency)
 
 
 def test_granularity():

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st   # hypothesis or skip-stub (tests/_hyp.py)
 
 from repro.kernels import ops
 from repro.kernels.ref import terapipe_attention_ref

@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st   # hypothesis or skip-stub (tests/_hyp.py)
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import BinTokenSource, DataPipeline, SyntheticSource
@@ -109,8 +110,8 @@ def test_checkpoint_atomic_no_partial(tmp_path):
 def test_checkpoint_elastic_resharding(tmp_path):
     """Save from one 'mesh', restore onto another sharding layout."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     mgr = CheckpointManager(str(tmp_path))
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     mgr.save(1, tree)

@@ -36,8 +36,8 @@ def test_terapipe_pipeline_loss_and_grads_match_reference():
         from repro.configs import get_config
         from repro.models import build_model
         from repro.core.pipeline import make_terapipe_loss, TeraPipeConfig
-        mesh = jax.make_mesh((2, 4), ("data", "pipe"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh, use_mesh
+        mesh = make_mesh((2, 4), ("data", "pipe"))
         cfg = get_config("phi3-mini-3.8b", smoke=True).replace(dtype=jnp.float32)
         model = build_model(cfg)
         params, specs = model.init(jax.random.PRNGKey(0))
@@ -47,7 +47,7 @@ def test_terapipe_pipeline_loss_and_grads_match_reference():
                  "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
         tcfg = TeraPipeConfig(n_token_slices=4, n_microbatches=2,
                               data_axes=("data",), cache_dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             loss_fn, _ = make_terapipe_loss(model, specs, mesh, tcfg, S, B)
             lp = float(jax.jit(loss_fn)(params, batch))
             lr = float(jax.jit(model.loss)(params, batch))
@@ -70,8 +70,8 @@ def test_terapipe_state_family_pipeline_matches():
         from repro.configs import get_config
         from repro.models import build_model
         from repro.core.pipeline import make_terapipe_loss, TeraPipeConfig
-        mesh = jax.make_mesh((2, 4), ("data", "pipe"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh, use_mesh
+        mesh = make_mesh((2, 4), ("data", "pipe"))
         cfg = get_config("mamba2-2.7b", smoke=True).replace(dtype=jnp.float32)
         model = build_model(cfg)
         params, specs = model.init(jax.random.PRNGKey(0))
@@ -81,7 +81,7 @@ def test_terapipe_state_family_pipeline_matches():
                  "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
         tcfg = TeraPipeConfig(n_token_slices=2, n_microbatches=2,
                               data_axes=("data",), cache_dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             loss_fn, _ = make_terapipe_loss(model, specs, mesh, tcfg, S, B)
             lp = float(jax.jit(loss_fn)(params, batch))
             lr = float(jax.jit(model.loss)(params, batch))
@@ -98,8 +98,8 @@ def test_gpipe_special_case_matches():
         from repro.configs import get_config
         from repro.models import build_model
         from repro.core.pipeline import make_gpipe_loss
-        mesh = jax.make_mesh((2, 4), ("data", "pipe"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh, use_mesh
+        mesh = make_mesh((2, 4), ("data", "pipe"))
         cfg = get_config("qwen3-0.6b", smoke=True).replace(dtype=jnp.float32)
         model = build_model(cfg)
         params, specs = model.init(jax.random.PRNGKey(0))
@@ -107,7 +107,7 @@ def test_gpipe_special_case_matches():
         rng = jax.random.PRNGKey(3)
         batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
                  "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             loss_fn, _ = make_gpipe_loss(model, specs, mesh, n_microbatches=4,
                                          seq_len=S, global_batch=B)
             lp = float(jax.jit(loss_fn)(params, batch))
@@ -125,8 +125,8 @@ def test_terapipe_with_tensor_parallel_stage():
         from repro.configs import get_config
         from repro.models import build_model
         from repro.core.pipeline import make_terapipe_loss, TeraPipeConfig
-        mesh = jax.make_mesh((2, 2, 2), ("data", "pipe", "tp"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.compat import make_mesh, use_mesh
+        mesh = make_mesh((2, 2, 2), ("data", "pipe", "tp"))
         cfg = get_config("phi3-mini-3.8b", smoke=True).replace(dtype=jnp.float32)
         model = build_model(cfg)
         params, specs = model.init(jax.random.PRNGKey(0))
@@ -136,7 +136,7 @@ def test_terapipe_with_tensor_parallel_stage():
                  "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
         tcfg = TeraPipeConfig(n_token_slices=2, n_microbatches=1, tp_axis="tp",
                               data_axes=("data",), cache_dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             loss_fn, _ = make_terapipe_loss(model, specs, mesh, tcfg, S, B)
             lp = float(jax.jit(loss_fn)(params, batch))
             lr = float(jax.jit(model.loss)(params, batch))
@@ -154,8 +154,8 @@ def test_nonuniform_dp_scheme_pipeline_matches():
         from repro.configs import get_config
         from repro.models import build_model
         from repro.core.pipeline import make_terapipe_loss, TeraPipeConfig
-        mesh = jax.make_mesh((2, 4), ("data", "pipe"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh, use_mesh
+        mesh = make_mesh((2, 4), ("data", "pipe"))
         cfg = get_config("phi3-mini-3.8b", smoke=True).replace(dtype=jnp.float32)
         model = build_model(cfg)
         params, specs = model.init(jax.random.PRNGKey(0))
@@ -165,7 +165,7 @@ def test_nonuniform_dp_scheme_pipeline_matches():
                  "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
         tcfg = TeraPipeConfig(slice_lens=(12, 8, 8, 4), n_microbatches=1,
                               data_axes=("data",), cache_dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             loss_fn, _ = make_terapipe_loss(model, specs, mesh, tcfg, S, B)
             lp = float(jax.jit(loss_fn)(params, batch))
             lr = float(jax.jit(model.loss)(params, batch))
