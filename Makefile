@@ -1,7 +1,7 @@
 # Tier-1 verification and common dev entry points.
 PY ?= python
 
-.PHONY: test test-full bench-dp dryrun-executors
+.PHONY: test test-full bench-dp bench-smoke dryrun-executors
 
 # tier-1 suite (the ROADMAP invocation, pinned here)
 test:
@@ -13,6 +13,12 @@ test-full:
 
 bench-dp:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
+
+# fast self-asserting benchmarks (CI): DP scheduler timings + vectorized
+# cost-matrix check, and the interleaved-schedule bubble assertions
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
+	PYTHONPATH=src $(PY) benchmarks/interleave_bench.py --assert-only
 
 # rolled vs unrolled tick-executor trace/lower wall-time report
 dryrun-executors:

@@ -11,7 +11,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 SUITES = ["table2_main", "table3_dp_ablation", "table4_seqlen",
-          "fig3_slice_throughput", "dp_bench", "kernel_bench", "train_bench"]
+          "fig3_slice_throughput", "dp_bench", "interleave_bench",
+          "kernel_bench", "train_bench"]
 
 
 def main() -> None:

@@ -80,10 +80,21 @@ def _dp_fixed_tmax(T: np.ndarray, n: int, t_max: float
 
 
 def optimal_slicing(t_fwd: Callable[[int, int], float], L: int, K: int, *,
-                    granularity: int = 1, eps: float = 1e-4) -> DPResult:
-    """Find l_1..l_M minimizing  Σ t_i + (K-1)·max_j t_j  (Eq. 5/6)."""
+                    granularity: int = 1, eps: float = 1e-4,
+                    virtual_stages: int = 1) -> DPResult:
+    """Find l_1..l_M minimizing  Σ t_i + w·max_j t_j  with w = (K-1)/V.
+
+    V=1 is the paper's Eq. 5/6.  With V virtual stages per rank (interleaved
+    schedule, core/schedules) the effective pipeline is K·V chunk-stages each
+    costing t_i/V, so the fill/drain term shrinks to (K-1)·t_max/V while the
+    Σ term is unchanged (every rank still does t_i of total work per item).
+    The smaller bubble weight shifts the optimum toward fewer, longer slices
+    for bubble-dominated shapes (long slices amortize the occupancy floor).
+    """
     g = granularity
     assert L % g == 0, (L, g)
+    assert virtual_stages >= 1, virtual_stages
+    bubble_w = (K - 1) / virtual_stages
     n = L // g
     T = _cost_matrix(t_fwd, L, g)
 
@@ -103,7 +114,9 @@ def optimal_slicing(t_fwd: Callable[[int, int], float], L: int, K: int, *,
     best = DPResult(np.inf, [], np.inf)
     evaluated = 0
     for t_max in cands:
-        if K * t_max >= best.latency:       # early stop (paper's optimization)
+        # early stop (paper's optimization): latency >= Σt_i + w·t_max
+        # >= (1 + w)·t_max  (Σ includes the max slice); (1+w) = K at V=1
+        if (1 + bubble_w) * t_max >= best.latency:
             break
         evaluated += 1
         total, slices = _dp_fixed_tmax(T, n, t_max)
@@ -111,7 +124,7 @@ def optimal_slicing(t_fwd: Callable[[int, int], float], L: int, K: int, *,
             continue
         # true max over the chosen slices (≤ t_max, possibly smaller)
         real_tmax = max(T[l, c] for l, c in _iter_lc(slices))
-        latency = total + (K - 1) * real_tmax
+        latency = total + bubble_w * real_tmax
         if latency < best.latency:
             best = DPResult(latency, [l * g for l in slices], real_tmax)
     best.n_tmax_evaluated = evaluated
@@ -123,6 +136,32 @@ def _iter_lc(slices_units: Sequence[int]):
     for l in slices_units:
         yield l, c
         c += l
+
+
+def pad_slice_count(slices: Sequence[int], multiple_of: int, *,
+                    granularity: int = 1) -> List[int]:
+    """Split slices until ``len(slices) % multiple_of == 0``.
+
+    Interleaved schedules (core/schedules) need the work-item count divisible
+    by the pipe degree, but Algorithm 1 does not track the slice COUNT — so
+    executability is restored as a post-pass: repeatedly split the largest
+    slice at a granularity-aligned midpoint.  Splitting never raises t_max
+    (each part <= the original), keeps Σ l_i = L, and preserves slice order,
+    so the plan stays valid; Σ t_i may grow slightly (occupancy floor),
+    which is the price of the constraint, not a bug.
+    """
+    out = list(slices)
+    assert multiple_of >= 1
+    while len(out) % multiple_of:
+        j = max(range(len(out)), key=lambda i: out[i])
+        if out[j] < 2 * granularity:
+            raise ValueError(
+                f"cannot split plan {list(slices)} into a multiple of "
+                f"{multiple_of} slices at granularity {granularity}: largest "
+                f"remaining slice is {out[j]}")
+        a = (out[j] // (2 * granularity)) * granularity
+        out[j:j + 1] = [a, out[j] - a]
+    return out
 
 
 def brute_force_slicing(t_fwd, L: int, K: int, *, granularity: int = 1
@@ -160,8 +199,12 @@ def joint_batch_token(t_fwd_b: Callable[[int], Callable[[int, int], float]],
                       L: int, B: int, K: int, *,
                       granularity: int = 1, eps: float = 1e-4,
                       batch_candidates: Optional[Sequence[int]] = None,
-                      objective: str = "pipeline") -> JointResult:
+                      objective: str = "pipeline",
+                      virtual_stages: int = 1) -> JointResult:
     """Joint batch × token optimization.
+
+    ``virtual_stages`` V scales the bubble term to (K-1)·t_max/V exactly as
+    in :func:`optimal_slicing` (interleaved schedule, core/schedules).
 
     objective="paper": the paper's §3.4 formulation — token DP per batch size
     b giving T_b = S*_b + (K-1)·t_max_b, then a knapsack minimizing Σ_d T_{b_d}.
@@ -176,10 +219,12 @@ def joint_batch_token(t_fwd_b: Callable[[int], Callable[[int, int], float]],
     the same execution model, strictly ≤ the paper objective's solution.
     """
     bs = list(batch_candidates or range(1, B + 1))
+    bubble_w = (K - 1) / virtual_stages
 
     if objective == "paper":
         per_b = {b: optimal_slicing(t_fwd_b(b), L, K, granularity=granularity,
-                                    eps=eps) for b in bs}
+                                    eps=eps, virtual_stages=virtual_stages)
+                 for b in bs}
         W = np.full(B + 1, np.inf)
         W[0] = 0.0
         choice = np.zeros(B + 1, dtype=np.int64)
@@ -211,7 +256,7 @@ def joint_batch_token(t_fwd_b: Callable[[int], Callable[[int, int], float]],
 
     best_latency, best_scheme = np.inf, None
     for t_max in cands:
-        if (K - 1) * t_max >= best_latency:
+        if bubble_w * t_max >= best_latency:
             break
         sums, slices_b = {}, {}
         for b in bs:
@@ -239,7 +284,7 @@ def joint_batch_token(t_fwd_b: Callable[[int], Callable[[int, int], float]],
             x -= b
         real_tmax = max(mats[b][l // g, c // g]
                         for b, sl in scheme for l, c in _iter_lc_units(sl, g))
-        latency = float(W[B]) + (K - 1) * real_tmax
+        latency = float(W[B]) + bubble_w * real_tmax
         if latency < best_latency:
             best_latency, best_scheme = latency, scheme
     return JointResult(best_latency, best_scheme)

@@ -25,20 +25,36 @@ Executor design (rolled tick loop)
 ----------------------------------
 
 The tick loop is ROLLED with ``jax.lax.scan`` over the tick index, so XLA
-traces and compiles ONE tick program regardless of ``D*M + K - 1`` — the
+traces and compiles ONE tick program regardless of ``V*(D*M) + K - 1`` — the
 large-M schemes the DP planner (§3.3) emits stay cheap to trace/compile.
+
+The schedule itself (which layer chunks live on which rank, and which
+``(work_item, chunk)`` a rank runs at each tick) comes from the schedule IR
+(``core/schedules.StageAssignment``): V=1 is the paper's contiguous
+TeraPipe schedule, ``TeraPipeConfig.virtual_stages`` V>=2 the Megatron-style
+interleaved virtual pipeline (each rank holds V round-robin layer chunks;
+the ppermute ring is traversed V times per work item; the fill/drain bubble
+shrinks by ~V because idle ticks cost one *chunk*, not one full stage).
 
 * Carry layout: ``(x_prev, caches, outbuf)`` —
   - ``x_prev``  (mb, l, d)        activation received from the previous
                                   stage at the end of the last tick;
   - ``caches``  per-layer pytree  KV / SSM / LRU state of the current
-                                  microbatch prefix (stacked on bps);
+                                  microbatch prefix; stacked on bps for V=1,
+                                  on a per-chunk leading axis (V, bps, ...)
+                                  for V>1 (each chunk keeps its own prefix);
   - ``outbuf``  (D*M, mb, l, d)   per-work-item output ring written by the
                                   last stage (other stages write garbage
-                                  that reassembly never reads).
-* The work item ``i = t - k_rank`` and its ``(mb_idx, sl_idx, ctx)`` are
-  computed from the traced tick index; non-uniform slice offsets come from
-  ``starts`` as a captured device array indexed with ``jnp.take``.
+                                  that reassembly never reads; under
+                                  interleaving a rank writes each item V
+                                  times and the final chunk lands last).
+* The unit ``u = t - k_rank`` maps to ``(work_item, chunk)`` via
+  ``StageAssignment.unit_index`` (pure arithmetic on the traced tick index);
+  its ``(mb_idx, sl_idx, ctx)`` follow as before, with non-uniform slice
+  offsets from ``starts`` as a captured device array indexed with
+  ``jnp.take``.  For V>1 the chunk's params/caches are gathered per tick
+  with ``dynamic_index_in_dim`` from pipe-sharded rank-major chunk stacks —
+  the body stays shape-stable, so it still traces once.
 * Double-buffered send/recv: the ``ppermute`` on ``x_out`` is issued as soon
   as the stage output exists, BEFORE the outbuf write (and, with
   ``skip_bubbles=False``, the cache merge) — those consume the previous
@@ -63,6 +79,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
+from repro.core.schedules import StageAssignment, interleave_stacked
 from repro.models import Model, build_model
 from repro.models.common import ModelConfig
 from repro.models.lm import _scan_full
@@ -93,6 +110,13 @@ class TeraPipeConfig:
     # rolled lax.scan executor.  Trace/compile cost grows with D*M + K - 1;
     # differential-testing / HLO-inspection escape hatch only.
     unroll: bool = False
+    # V: virtual pipeline stages (Megatron-LM interleaving, via the schedule
+    # IR in core/schedules).  Each rank holds V non-contiguous layer chunks
+    # (round-robin over the K*V global stages) and the ppermute ring is
+    # traversed V times per work item, shrinking the fill/drain bubble by ~V
+    # at the cost of V ring hops per item.  V=1 is the paper's contiguous
+    # schedule; V>1 requires D*M divisible by the pipe degree K.
+    virtual_stages: int = 1
 
 
 def _group_split(model: Model):
@@ -170,8 +194,10 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
 
     pre, main, post = _group_split(model)
     n_main = main.count
-    bps = -(-n_main // K)                      # blocks per stage (ceil)
-    n_pad = K * bps - n_main
+    V = tcfg.virtual_stages
+    assign = StageAssignment(n_ranks=K, virtual_stages=V, n_layers=n_main)
+    bps = assign.blocks_per_chunk              # blocks per (virtual) stage
+    n_pad = assign.n_pad
 
     # local-config model: block fns see TP-local head counts inside shard_map
     if tp > 1:
@@ -197,7 +223,13 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
     # batch activations: sharded over data axes, replicated over pipe/tp
     x_spec = P(tcfg.data_axes, None, None)
     DM = D * M
-    ticks = DM + K - 1
+    if V > 1:
+        assert DM % K == 0, (
+            f"virtual_stages={V} needs D*M = {D}*{M} = {DM} divisible by the "
+            f"pipe degree K={K}: interleaved work items advance in ring "
+            f"groups of K (see core/schedules)")
+    n_units = assign.n_units(DM)               # per-rank units (= DM * V)
+    ticks = assign.n_ticks(DM)
 
     # ---- the SPMD pipeline body (per-device program) ----
     uniform_slices = all(s == l for s in slice_lens)
@@ -211,60 +243,90 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
         k_rank = jax.lax.axis_index(tcfg.pipe_axis)
         starts_arr = jnp.asarray(starts_arr_host, jnp.int32)
         # per-layer cache struct (from the local model), re-led with bps
+        # (and, for V>1, a per-chunk leading axis: each of the rank's V
+        # chunks keeps its own microbatch-prefix state)
         cache_struct = jax.eval_shape(
             lambda: main_local.init_cache(mb_local, cache_len, tcfg.cache_dtype))
+        lead = (V, bps) if V > 1 else (bps,)
         caches = jax.tree.map(
-            lambda a: jnp.zeros((bps,) + a.shape[1:], a.dtype), cache_struct)
+            lambda a: jnp.zeros(lead + a.shape[1:], a.dtype), cache_struct)
+        if V > 1:
+            # the local stack arrives rank-major chunk order (see loss_fn):
+            # (V*bps, ...) -> (V, bps, ...) so a tick can gather its chunk
+            stage_params = jax.tree.map(
+                lambda a: a.reshape((V, bps) + a.shape[1:]), stage_params)
 
-        def stage_apply(x, caches, ctx):
+        def stage_apply(params_c, x, caches_c, ctx):
             def body(h, inp):
                 bp_l, c_l = inp
                 h, c_l = block_fn(bp_l, h, c_l, ctx)
                 return h, c_l
             body_fn = jax.checkpoint(body) if cfg.remat else body
-            x, caches = jax.lax.scan(body_fn, x, (stage_params, caches))
-            return x, caches
+            x, caches_c = jax.lax.scan(body_fn, x, (params_c, caches_c))
+            return x, caches_c
 
         def tick(carry, t):
             """One pipeline tick.  ``t`` is traced — the body is shape-stable
             in the tick index, so it traces ONCE under the rolled executor."""
             x_prev, caches, outbuf = carry
-            i = t - k_rank                                   # work item id
-            valid = (i >= 0) & (i < DM)
-            i_c = jnp.clip(i, 0, DM - 1)
+            u = t - k_rank                             # per-rank unit id
+            valid = (u >= 0) & (u < n_units)
+            u_c = jnp.clip(u, 0, n_units - 1)
+            i_c, v_idx = assign.unit_index(u_c)        # (work item, chunk)
             mb_idx, sl_idx = i_c // M, i_c % M
             ctx = jnp.take(starts_arr, sl_idx) if not uniform_slices \
                 else sl_idx * l
             x0 = jax.lax.dynamic_slice(
                 x_emb, (mb_idx * mb_local, ctx, 0), (mb_local, l, d_model))
-            x_in = jnp.where(k_rank == 0, x0, x_prev)
+            if V == 1:
+                x_in = jnp.where(k_rank == 0, x0, x_prev)
+                params_c, caches_c = stage_params, caches
+            else:
+                # chunk 0 of rank 0 admits new work; every other (rank,
+                # chunk) consumes the ring — rank 0 chunk v>0 receives the
+                # chunk v-1 -> v handoff on the (K-1, 0) wrap-around edge
+                x_in = jnp.where((k_rank == 0) & (v_idx == 0), x0, x_prev)
+                params_c = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, v_idx, 0, keepdims=False), stage_params)
+                caches_c = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, v_idx, 0, keepdims=False), caches)
             # new microbatch => fresh prefix: zero the caches.  Required for
             # state-based families (SSM/LRU carry real state); harmless and
             # exact for KV caches (masked by absolute positions anyway).
             fresh = sl_idx == 0
-            caches = jax.tree.map(
+            caches_c = jax.tree.map(
                 lambda c: jnp.where(jnp.reshape(fresh, (1,) * c.ndim),
-                                    jnp.zeros_like(c), c), caches)
+                                    jnp.zeros_like(c), c), caches_c)
             if tcfg.skip_bubbles:
                 # idle (fill/drain) ticks take the cheap branch at runtime
-                x_out, caches = jax.lax.cond(
+                x_out, caches_c = jax.lax.cond(
                     valid,
-                    lambda xi, cs: stage_apply(xi, cs, ctx),
+                    lambda xi, cs: stage_apply(params_c, xi, cs, ctx),
                     lambda xi, cs: (xi, cs),
-                    x_in, caches)
+                    x_in, caches_c)
             else:
-                x_out, caches_new = stage_apply(x_in, caches, ctx)
-                caches = jax.tree.map(
+                x_out, caches_new = stage_apply(params_c, x_in, caches_c, ctx)
+                caches_c = jax.tree.map(
                     lambda new, old: jnp.where(
                         jnp.reshape(valid, (1,) * new.ndim), new, old),
-                    caches_new, caches)
-            # double buffer: issue the send/recv on x_out FIRST — the outbuf
-            # write below only reads x_out, so the async collective-permute
-            # overlaps the trailing per-tick bookkeeping on the compute stream
+                    caches_new, caches_c)
+            # double buffer: issue the send/recv on x_out FIRST — the writes
+            # below only read x_out / caches_c, so the async collective-
+            # permute overlaps the trailing per-tick bookkeeping
             x_next = jax.lax.ppermute(
                 x_out, tcfg.pipe_axis, [(j, (j + 1) % K) for j in range(K)])
+            if V == 1:
+                caches = caches_c
+            else:
+                caches = jax.tree.map(
+                    lambda cs, c: jax.lax.dynamic_update_index_in_dim(
+                        cs, c, v_idx, 0), caches, caches_c)
             # always-write (clamped): only the last stage's buffer is read,
             # and for it every valid item overwrites any earlier garbage
+            # (under interleaving, writes for an item ascend in chunk order,
+            # so the final chunk V-1 lands last)
             outbuf = jax.lax.dynamic_update_slice(
                 outbuf, x_out[None], (i_c, 0, 0, 0))
             return (x_next, caches, outbuf), None
@@ -297,18 +359,25 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
             x = jnp.pad(x, ((0, 0), (0, l), (0, 0)))
 
         stage_params = params["groups"][main.name]
-        if n_pad:
+        if n_pad or V > 1:
             # zero blocks are exact identities (residual blocks, see DESIGN);
             # constrain the result straight to the pipe-sharded layout so the
-            # pad does not bounce through a replicated intermediate.  NB: must
-            # be jnp.pad, NOT concatenate-with-zeros — XLA mispartitions the
-            # concat feeding a shard_map operand on multi-axis meshes
-            # (data>1 x pipe, observed on jax 0.4.37: garbage stage params).
-            stage_params = jax.tree.map(
-                lambda a, sp: jax.lax.with_sharding_constraint(
-                    jnp.pad(a, ((0, n_pad),) + ((0, 0),) * (a.ndim - 1)),
-                    NamedSharding(mesh, sp)),
-                stage_params, stage_in_specs)
+            # pad/permute does not bounce through a replicated intermediate.
+            # NB: must be jnp.pad, NOT concatenate-with-zeros — XLA
+            # mispartitions the concat feeding a shard_map operand on
+            # multi-axis meshes (data>1 x pipe, observed on jax 0.4.37:
+            # garbage stage params).  interleave_stacked is reshape+swapaxes
+            # for the same reason (no gather).
+            def _prep(a, sp):
+                if n_pad:
+                    a = jnp.pad(a, ((0, n_pad),) + ((0, 0),) * (a.ndim - 1))
+                if V > 1:
+                    # stage-major -> rank-major chunk order, so the plain
+                    # pipe-sharding below hands rank k its V chunks
+                    a = interleave_stacked(a, assign)
+                return jax.lax.with_sharding_constraint(
+                    a, NamedSharding(mesh, sp))
+            stage_params = jax.tree.map(_prep, stage_params, stage_in_specs)
 
         out = shmap(stage_params, x)
         out_last = jax.lax.slice_in_dim(out, (K - 1) * DM, K * DM, axis=0)
@@ -338,13 +407,18 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
     def param_shardings(params_tree_specs):
         """NamedSharding tree for jit in_shardings (stage params pipe-sharded,
         everything else replicated/TP per logical spec)."""
-        def one(path_spec):
-            return NamedSharding(mesh, P())
-        # main group: pipe on layer axis (+tp); others replicated
+        # main group: pipe on layer axis (+tp); others replicated.  When the
+        # UNPADDED stack is not divisible by the pipe degree (e.g. gpt3-1b's
+        # 24 layers on pipe=16) a pipe-sharded in_sharding would be rejected
+        # at the jit boundary — keep the layer axis replicated there and let
+        # the loss re-shard at the pad boundary (the with_sharding_constraint
+        # after jnp.pad above).
         def build(spec, in_main):
             if in_main:
-                return NamedSharding(
-                    mesh, _leaf_pspec(spec, tcfg.tp_axis, tp, tcfg.pipe_axis, cfg))
+                ps = _leaf_pspec(spec, tcfg.tp_axis, tp, tcfg.pipe_axis, cfg)
+                if n_main % K:
+                    ps = P(None, *tuple(ps)[1:])
+                return NamedSharding(mesh, ps)
             return NamedSharding(mesh, P())
         out = {}
         for key, sub in params_tree_specs.items():

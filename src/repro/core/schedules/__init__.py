@@ -1,0 +1,66 @@
+"""Pipeline-schedule subsystem: plan, simulate, and execute layer-chunk
+assignments (DESIGN: the schedule is a first-class system dimension, not an
+implicit property of one executor loop — Chimera, Li & Hoefler 2021).
+
+The IR
+------
+
+A schedule is a :class:`StageAssignment`: ``K`` pipeline ranks each holding
+``V`` *virtual stages* (layer chunks), for ``K·V`` global stages total.
+Global stage ``s`` owns the contiguous layer rows ``[s·bpc, (s+1)·bpc)`` of
+the (padded) stacked main group and lives on rank ``s mod K`` as chunk
+``s // K`` — round-robin, Megatron-LM's interleaved virtual pipeline
+(Narayanan et al., 2021).  The IR answers three questions:
+
+* **placement** — which layer rows live on which rank, and in what local
+  order (:meth:`StageAssignment.param_permutation` /
+  :func:`interleave_stacked`: rank-major chunk order, so a plain
+  pipe-sharding of the leading layer axis hands rank ``k`` exactly chunks
+  ``k, K+k, …, (V-1)·K+k``);
+* **timing** — the tick table mapping ``(tick, rank) -> (work_item, chunk)``
+  (:meth:`StageAssignment.tick_table`), with
+  :meth:`StageAssignment.unit_index` as the pure-arithmetic form the rolled
+  executor evaluates on the *traced* tick index (shape-stable: one tick
+  program serves every table entry);
+* **validity** — :meth:`StageAssignment.validate` audits that every
+  ``(work_item, stage)`` unit runs exactly once and lands exactly one tick
+  after its producer on the ring predecessor.
+
+The V-pass ppermute ring
+------------------------
+
+The executor's only collective is the single ring
+``ppermute [(k, (k+1) mod K)]`` issued once per tick.  Under interleaving
+each work item traverses that ring **V times**: chunk ``v`` flows down ranks
+``0..K-1`` and the wrap-around edge ``K-1 -> 0`` — a bubble in the
+contiguous schedule — carries the live chunk ``v -> v+1`` handoff.  Work
+items advance in groups of ``K`` (``D·M`` must divide by ``K`` for ``V>1``):
+rank ``k``'s ``u``-th unit is work item ``(u÷(K·V))·K + u mod K`` on chunk
+``(u mod K·V) ÷ K``, which makes every dependency arrive exactly one tick
+ahead of its consumer (see ``validate``).  Fill/drain shrinks from ``K-1``
+ticks of *full-stage* work to ``K-1`` ticks of *chunk* (``1/V``) work:
+bubble fraction ``(K-1)/V / (D·M + (K-1)/V)``.
+
+Why non-uniform token slices compose with interleaving
+------------------------------------------------------
+
+TeraPipe's DP-planned slice lengths (paper §3.3) only determine each work
+item's ``(microbatch, slice, context)`` coordinates — *what* a unit
+computes.  The interleave dimension only determines *where and when* a unit
+runs (which chunk, which tick).  Each chunk observes work items in the same
+global order ``0..D·M-1`` as the contiguous schedule, so the per-chunk KV /
+SSM state sees the exact prefix semantics of the V=1 executor and the two
+optimizations multiply: slicing shrinks per-item latency, interleaving
+divides the remaining fill/drain bubble by V.  (The planner accounts for
+the composition by weighting the Eq. 5 bubble term with ``(K-1)/V`` — see
+``core/dp.optimal_slicing(virtual_stages=...)``.)
+
+Two concrete schedules are provided: :func:`contiguous` (V=1, the paper's
+TeraPipe schedule) and :func:`interleaved` (V≥2).  Future schedules (1F1B,
+Chimera-style bidirectional) extend the same IR.
+"""
+from .ir import (StageAssignment, contiguous, interleaved,  # noqa: F401
+                 interleave_stacked)
+
+__all__ = ["StageAssignment", "contiguous", "interleaved",
+           "interleave_stacked"]

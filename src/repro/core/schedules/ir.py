@@ -1,0 +1,154 @@
+"""Schedule IR: stage/chunk placement and tick geometry (see package doc)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StageAssignment:
+    """K ranks × V layer chunks: placement + tick table for one schedule.
+
+    ``n_layers`` is the UNPADDED main-stack block count; the assignment pads
+    it to ``K·V·blocks_per_chunk`` rows (zero blocks are exact identities in
+    a residual stack, so padding is placement-free).
+    """
+    n_ranks: int          # K
+    virtual_stages: int   # V (1 = contiguous TeraPipe schedule)
+    n_layers: int
+
+    def __post_init__(self):
+        assert self.n_ranks >= 1 and self.virtual_stages >= 1, self
+        assert self.n_layers >= 1, self
+
+    # ---- layer-chunk geometry -------------------------------------------
+    @property
+    def n_stages(self) -> int:
+        """Global pipeline depth K·V."""
+        return self.n_ranks * self.virtual_stages
+
+    @property
+    def blocks_per_chunk(self) -> int:
+        return -(-self.n_layers // self.n_stages)
+
+    @property
+    def n_padded(self) -> int:
+        return self.n_stages * self.blocks_per_chunk
+
+    @property
+    def n_pad(self) -> int:
+        return self.n_padded - self.n_layers
+
+    def rank_of_stage(self, s: int) -> int:
+        return s % self.n_ranks
+
+    def chunk_of_stage(self, s: int) -> int:
+        return s // self.n_ranks
+
+    def stage_of(self, rank: int, chunk: int) -> int:
+        return chunk * self.n_ranks + rank
+
+    def layer_rows(self, s: int):
+        """[lo, hi) rows of the padded stage-major stack owned by stage s."""
+        b = self.blocks_per_chunk
+        return s * b, (s + 1) * b
+
+    def param_permutation(self) -> np.ndarray:
+        """Padded-stack row order making each rank's V chunks contiguous
+        (rank-major): row ``k·V·bpc + v·bpc + b`` holds global stage
+        ``v·K + k``'s b-th layer.  A plain pipe-sharding of the permuted
+        leading axis then gives rank k exactly its chunks."""
+        K, V, b = self.n_ranks, self.virtual_stages, self.blocks_per_chunk
+        return np.arange(self.n_padded).reshape(V, K, b).swapaxes(0, 1).reshape(-1)
+
+    # ---- tick geometry ---------------------------------------------------
+    def n_units(self, n_items: int) -> int:
+        """Work units per rank: every rank touches every work item V times."""
+        if self.virtual_stages > 1:
+            assert n_items % self.n_ranks == 0, (
+                f"interleaved schedule (V={self.virtual_stages}) needs the "
+                f"work-item count {n_items} divisible by K={self.n_ranks} "
+                f"(items advance in ring groups of K)")
+        return n_items * self.virtual_stages
+
+    def n_ticks(self, n_items: int) -> int:
+        return self.n_units(n_items) + self.n_ranks - 1
+
+    def unit_index(self, u):
+        """(work_item, chunk) of a rank's u-th unit.  Pure arithmetic in u —
+        evaluates on python ints, numpy arrays, and traced jax scalars alike
+        (the rolled executor calls it with the traced tick index, so the one
+        traced tick program serves the whole tick table)."""
+        K, V = self.n_ranks, self.virtual_stages
+        if V == 1:
+            return u, u * 0
+        KV = K * V
+        g, r = u // KV, u % KV
+        return g * K + r % K, r // K
+
+    def tick_table(self, n_items: int) -> np.ndarray:
+        """(n_ticks, K, 2) array; entry (t, k) = (work_item, chunk), or
+        (-1, -1) when rank k idles (fill/drain) at tick t."""
+        T, K = self.n_ticks(n_items), self.n_ranks
+        n_units = self.n_units(n_items)
+        tab = np.full((T, K, 2), -1, np.int64)
+        for k in range(K):
+            u = np.arange(T) - k
+            ok = (u >= 0) & (u < n_units)
+            i, v = self.unit_index(np.clip(u, 0, n_units - 1))
+            tab[ok, k, 0] = np.broadcast_to(i, (T,))[ok]
+            tab[ok, k, 1] = np.broadcast_to(v, (T,))[ok]
+        return tab
+
+    def validate(self, n_items: int) -> bool:
+        """Audit the tick table: every (work_item, stage) unit runs exactly
+        once, one unit per (tick, rank), and each unit's producer (previous
+        global stage of the same item) ran on the ring predecessor exactly
+        one tick earlier — i.e. the single per-tick ppermute ring delivers
+        every dependency just in time."""
+        tab = self.tick_table(n_items)
+        when = {}
+        for t in range(tab.shape[0]):
+            for k in range(self.n_ranks):
+                i, v = int(tab[t, k, 0]), int(tab[t, k, 1])
+                if i < 0:
+                    continue
+                s = self.stage_of(k, v)
+                assert (i, s) not in when, f"unit {(i, s)} scheduled twice"
+                when[(i, s)] = (t, k)
+        assert len(when) == n_items * self.n_stages, (
+            len(when), n_items, self.n_stages)
+        for (i, s), (t, k) in when.items():
+            if s == 0:
+                continue
+            tp, kp = when[(i, s - 1)]
+            assert tp == t - 1 and kp == (k - 1) % self.n_ranks, (
+                f"unit (item={i}, stage={s}) at (t={t}, k={k}) but producer "
+                f"ran at (t={tp}, k={kp}); ring cannot deliver it")
+        return True
+
+
+def contiguous(n_ranks: int, n_layers: int) -> StageAssignment:
+    """The paper's TeraPipe schedule: one contiguous chunk per rank."""
+    return StageAssignment(n_ranks, 1, n_layers)
+
+
+def interleaved(n_ranks: int, virtual_stages: int,
+                n_layers: int) -> StageAssignment:
+    """Megatron-style interleaved virtual pipeline: V round-robin chunks per
+    rank, ring traversed V times per work item."""
+    assert virtual_stages >= 2, virtual_stages
+    return StageAssignment(n_ranks, virtual_stages, n_layers)
+
+
+def interleave_stacked(a, assign: StageAssignment):
+    """Reorder a padded stage-major stacked array (leading axis ``n_padded``)
+    into rank-major chunk order; equals ``a[assign.param_permutation()]`` but
+    built from reshape+swapaxes, which GSPMD partitions cleanly where a
+    gather may not (cf. the concatenate-vs-pad note in core/pipeline.py)."""
+    K, V, b = assign.n_ranks, assign.virtual_stages, assign.blocks_per_chunk
+    s = a.shape
+    assert s[0] == assign.n_padded, (s, assign)
+    return a.reshape((V, K, b) + s[1:]).swapaxes(0, 1).reshape(
+        (assign.n_padded,) + s[1:])

@@ -1,13 +1,17 @@
 """Event-driven pipeline latency simulator.
 
 Evaluates a :class:`SlicingScheme` on a K-stage pipeline under a cost model,
-in two execution disciplines:
+in three execution disciplines:
 
 * ``async`` — GPU-style (the paper's): each stage starts a work item as soon
   as its input arrives and the stage is free.  Reproduces Eq. 5 exactly for
   a single batch split: T = Σ t_i + (K-1) max t_i.
 * ``lockstep`` — TPU SPMD-style: all stages advance tick-by-tick (ppermute is
   a global collective), so tick duration = max over active stage work.
+* ``interleaved`` — lockstep with V virtual stages per rank (the schedule IR
+  in ``core/schedules``): each work item traverses the ring V times in
+  chunk-sized (1/V) units, so fill/drain ticks cost 1/V of a full stage and
+  the bubble shrinks by ~V.  Requires the work-item count divisible by K.
 
 Supports per-stage slowdown factors (straggler studies / DP-based
 re-planning) and fwd+bwd symmetric simulation.
@@ -20,6 +24,7 @@ import numpy as np
 
 from .cost_model import CostModel
 from .schedule import SlicingScheme
+from .schedules import StageAssignment
 
 
 def _work_items(scheme: SlicingScheme, t_of, include_backward: bool):
@@ -39,34 +44,96 @@ def _work_items(scheme: SlicingScheme, t_of, include_backward: bool):
     return items
 
 
+def _async_total(items, K: int, slow) -> float:
+    """Async (GPU-style) finish time of the flattened work-item durations."""
+    M = len(items)
+    finish = np.zeros((K, M))
+    for k in range(K):
+        for i in range(M):
+            prev_same_stage = finish[k, i - 1] if i > 0 else 0.0
+            prev_same_item = finish[k - 1, i] if k > 0 else 0.0
+            start = max(prev_same_stage, prev_same_item)
+            finish[k, i] = start + items[i] * slow[k]
+    return float(finish[-1, -1])
+
+
+def _lockstep_loop(items, K: int, slow) -> float:
+    """Scalar-loop reference for the lockstep discipline (pre-vectorization);
+    kept for differential testing against :func:`_lockstep_total`."""
+    M = len(items)
+    total = 0.0
+    for t in range(M + K - 1):
+        active = [items[t - k] * slow[k] for k in range(K) if 0 <= t - k < M]
+        total += max(active)
+    return float(total)
+
+
+def _lockstep_total(items, K: int, V: int, slow) -> float:
+    """Vectorized lockstep tick sum, generalized to V virtual stages.
+
+    Rank k's unit at tick t is ``u = t - k``; the schedule IR maps u to its
+    (work_item, chunk) and a chunk costs ``t_item / V`` (layer chunks are
+    1/V of a rank's stack).  Tick duration = max over active ranks; every
+    rank has at most one unit per tick by construction (StageAssignment).
+    One numpy broadcast over the whole (ticks, K) grid replaces the
+    O(ticks·K) interpreter loop (cf. ``dp._cost_matrix``).
+    """
+    items = np.asarray(items, np.float64)
+    assign = StageAssignment(n_ranks=K, virtual_stages=V, n_layers=1)
+    n_units = assign.n_units(items.size)        # asserts divisibility for V>1
+    u = np.arange(n_units + K - 1)[:, None] - np.arange(K)[None, :]
+    valid = (u >= 0) & (u < n_units)
+    i, _ = assign.unit_index(np.clip(u, 0, n_units - 1))
+    dur = np.where(valid, items[i] * (np.asarray(slow)[None, :] / V), 0.0)
+    return float(dur.max(axis=1).sum())
+
+
+def _discipline_total(items, K: int, discipline: str, virtual_stages: int,
+                      slow) -> float:
+    """Dispatch flattened work-item durations to one discipline engine —
+    the single place a new discipline (e.g. 1F1B) gets wired in."""
+    if discipline == "async":
+        assert virtual_stages == 1, \
+            "async discipline models the contiguous (V=1) schedule only"
+        return _async_total(items, K, slow)
+    if discipline == "lockstep":
+        assert virtual_stages == 1, \
+            "use discipline='interleaved' for V>1 lockstep schedules"
+        return _lockstep_total(items, K, 1, slow)
+    if discipline == "interleaved":
+        return _lockstep_total(items, K, virtual_stages, slow)
+    raise ValueError(discipline)
+
+
 def simulate(scheme: SlicingScheme, K: int, t_of, *,
              discipline: str = "async", include_backward: bool = False,
-             stage_slowdown: Optional[Sequence[float]] = None) -> float:
+             stage_slowdown: Optional[Sequence[float]] = None,
+             virtual_stages: int = 1) -> float:
     """t_of(b, l, ctx) -> seconds for one stage.  Returns total latency."""
     items = _work_items(scheme, t_of, include_backward)
-    M = len(items)
     slow = np.ones(K) if stage_slowdown is None else np.asarray(stage_slowdown)
     assert len(slow) == K
+    return _discipline_total(items, K, discipline, virtual_stages, slow)
 
-    if discipline == "async":
-        finish = np.zeros((K, M))
-        for k in range(K):
-            for i in range(M):
-                prev_same_stage = finish[k, i - 1] if i > 0 else 0.0
-                prev_same_item = finish[k - 1, i] if k > 0 else 0.0
-                start = max(prev_same_stage, prev_same_item)
-                finish[k, i] = start + items[i] * slow[k]
-        return float(finish[-1, -1])
 
-    if discipline == "lockstep":
-        # tick t: stage k runs item (t - k) if 0 <= t-k < M
-        total = 0.0
-        for t in range(M + K - 1):
-            active = [items[t - k] * slow[k] for k in range(K) if 0 <= t - k < M]
-            total += max(active)
-        return float(total)
+def bubble_fraction(scheme: SlicingScheme, K: int, t_of, *,
+                    discipline: str = "lockstep", virtual_stages: int = 1,
+                    include_backward: bool = False,
+                    stage_slowdown: Optional[Sequence[float]] = None) -> float:
+    """Fraction of the step spent idle in fill/drain: (T - T_work) / T.
 
-    raise ValueError(discipline)
+    T_work = Σ_i t_i scaled by the slowest rank — the busy time of a rank
+    that touches every work item (V chunks of t_i/V each), i.e. the
+    zero-bubble floor of the lockstep disciplines.
+    """
+    # flatten once and feed the discipline engine directly — t_of can be a
+    # measured cost model; going through simulate() would evaluate it a
+    # second time per work item
+    items = _work_items(scheme, t_of, include_backward)
+    slow = np.ones(K) if stage_slowdown is None else np.asarray(stage_slowdown)
+    T = _discipline_total(items, K, discipline, virtual_stages, slow)
+    work = float(np.sum(items)) * float(np.max(slow))
+    return (T - work) / T
 
 
 def eq5_latency(slices: List[int], K: int, t_fwd, b: int = 1) -> float:

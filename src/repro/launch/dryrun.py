@@ -39,6 +39,18 @@ from repro.optim.adamw import adamw, cosine_schedule
 from repro.distributed.sharding import batch_shardings
 
 
+def cell_tag(arch: str, shape_name: str, multi_pod: bool, mode: str,
+             virtual_stages: int = 1, variant: str = "") -> str:
+    """Result-file tag for one cell — the single source of truth, used both
+    when writing results (run_cell) and when probing the --skip-done cache."""
+    tag = f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}_{mode}"
+    if virtual_stages > 1:
+        tag += f"_v{virtual_stages}"
+    if variant:
+        tag += f"_{variant}"
+    return tag
+
+
 def _mem_dict(mem) -> dict:
     return {k: getattr(mem, k) for k in (
         "generated_code_size_in_bytes", "argument_size_in_bytes",
@@ -52,7 +64,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              param_dtype=None, remat_policy: str = "full",
              layout: str = "tp", fsdp: bool = True, capacity=None,
              seqpar: bool = False, terapipe_dp: bool = False,
-             variant: str = "") -> dict:
+             virtual_stages: int = 1, variant: str = "") -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
     if remat_policy != "full":
@@ -60,11 +72,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     if capacity is not None:
         cfg = cfg.replace(capacity_factor=capacity)
     reason = skip_reason(arch, shape_name)
-    tag = f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}_{mode}"
-    if variant:
-        tag += f"_{variant}"
+    if mode != "terapipe":
+        virtual_stages = 1      # only the terapipe lowering consumes it —
+                                # don't stamp v-tags onto identical cells
+    tag = cell_tag(arch, shape_name, multi_pod, mode, virtual_stages, variant)
     rec = {"arch": arch, "shape": shape_name, "mode": mode,
-           "multi_pod": multi_pod, "n_chips": 512 if multi_pod else 256}
+           "multi_pod": multi_pod, "n_chips": 512 if multi_pod else 256,
+           "virtual_stages": virtual_stages}
     if reason:
         rec["skipped"] = reason
         return _dump(rec, out_dir, tag)
@@ -75,7 +89,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         if mode == "terapipe":
             lowered, n_chips = _lower_terapipe(
                 model, shape, multi_pod, terapipe_slices, terapipe_pipe,
-                dp_plan=terapipe_dp)
+                dp_plan=terapipe_dp, virtual_stages=virtual_stages)
         else:
             lowered, n_chips = _lower_gspmd(model, cfg, shape, multi_pod,
                                             param_dtype=param_dtype,
@@ -182,7 +196,8 @@ def _lower_gspmd(model, cfg, shape, multi_pod, param_dtype=None,
 
 
 def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
-                    dp_plan: bool = False, unroll: bool = False):
+                    dp_plan: bool = False, unroll: bool = False,
+                    virtual_stages: int = 1):
     from repro.core.pipeline import TeraPipeConfig, make_terapipe_loss
     from repro.launch.steps import abstract_init, abstract_opt_state
     from repro.optim.adamw import apply_updates
@@ -199,18 +214,43 @@ def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
     slice_lens = None
     if dp_plan:
         from repro.core.cost_model import AnalyticCostModel, TPU_V5E
-        from repro.core.dp import optimal_slicing
+        from repro.core.dp import optimal_slicing, pad_slice_count
         cm = AnalyticCostModel(cfg, TPU_V5E,
                                layers_per_stage=max(1, model.n_blocks // n_pipe))
-        plan = optimal_slicing(cm, shape.seq_len, n_pipe, granularity=128)
-        slice_lens = tuple(plan.slices)
+        plan = optimal_slicing(cm, shape.seq_len, n_pipe, granularity=128,
+                               virtual_stages=virtual_stages)
+        slices = plan.slices
+        if virtual_stages > 1 and len(slices) % n_pipe:
+            # restore the interleaved executability constraint (M % K == 0)
+            # by splitting the plan's largest slices (never raises t_max)
+            slices = pad_slice_count(slices, n_pipe, granularity=128)
+        slice_lens = tuple(slices)
         print(f"[dp-plan] {len(slice_lens)} slices: {list(slice_lens)}",
               flush=True)
+    elif virtual_stages > 1 and n_slices % n_pipe:
+        # interleaved work items advance in ring groups of K: adjust the
+        # slice count so D*M (D=1 here) divides the pipe degree — while
+        # keeping M a divisor of seq_len (uniform-slice executor requirement)
+        ok = [m for m in range(n_pipe, shape.seq_len + 1, n_pipe)
+              if shape.seq_len % m == 0]
+        if not ok:
+            raise ValueError(
+                f"--virtual-stages {virtual_stages} needs a token-slice "
+                f"count that is a multiple of pipe={n_pipe} AND divides "
+                f"seq_len={shape.seq_len}; none exists — pick a pipe degree "
+                f"whose factors divide the sequence length")
+        snapped = min((m for m in ok if m >= n_slices), default=ok[-1])
+        print(f"[terapipe] V={virtual_stages} needs M % pipe == 0; adjusting "
+              f"token slices {n_slices} -> {snapped}"
+              + (" (capped: no valid count >= request)"
+                 if snapped < n_slices else ""), flush=True)
+        n_slices = snapped
     tcfg = TeraPipeConfig(n_token_slices=n_slices, slice_lens=slice_lens,
                           n_microbatches=1,
                           pipe_axis="pipe",
                           tp_axis="tp" if tp > 1 else None,
-                          data_axes=daxes, unroll=unroll)
+                          data_axes=daxes, unroll=unroll,
+                          virtual_stages=virtual_stages)
     structs, specs = abstract_init(model)
     with use_mesh(mesh):
         loss_fn, param_sh_fn = make_terapipe_loss(
@@ -241,16 +281,6 @@ def compare_executors(arch: str, shape_name: str, *, terapipe_slices: int = 16,
     D*M >= 16 rolled must win."""
     shape = SHAPES[shape_name]
     model = build_model(get_config(arch))
-    if model.n_blocks % terapipe_pipe:
-        # param_shardings pipe-shard the UNPADDED layer stack (ROADMAP open
-        # item) — snap to the largest pipe degree that divides both the layer
-        # count and the 16-wide model axis, so the default CLI invocation
-        # works for any arch (e.g. gpt3-1b's 24 layers with the default 16)
-        fixed = max(p for p in range(1, terapipe_pipe + 1)
-                    if model.n_blocks % p == 0 and 16 % p == 0)
-        print(f"[exec] pipe={terapipe_pipe} does not divide "
-              f"{model.n_blocks} layers; using pipe={fixed}", flush=True)
-        terapipe_pipe = fixed
     rec = {"arch": arch, "shape": shape_name, "mode": "terapipe",
            "n_slices": terapipe_slices, "pipe": terapipe_pipe,
            "executors": {}}
@@ -315,6 +345,9 @@ def main():
     ap.add_argument("--skip-done", action="store_true")
     ap.add_argument("--terapipe-slices", type=int, default=4)
     ap.add_argument("--terapipe-pipe", type=int, default=16)
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="V layer chunks per pipeline rank (interleaved "
+                    "schedule; terapipe mode only)")
     ap.add_argument("--param-dtype", default=None, choices=[None, "bf16"])
     ap.add_argument("--remat-policy", default="full", choices=["full", "dots"])
     ap.add_argument("--layout", default="tp", choices=["tp", "dp"])
@@ -349,7 +382,9 @@ def main():
 
     n_fail = 0
     for a, s, mp in cells:
-        tag = f"{a}_{s}_{'pod2' if mp else 'pod1'}_{args.mode}"
+        tag = cell_tag(a, s, mp, args.mode,
+                       args.virtual_stages if args.mode == "terapipe" else 1,
+                       args.variant)
         if args.skip_done and (Path(args.out_dir) / f"{tag}.json").exists():
             prev = json.loads((Path(args.out_dir) / f"{tag}.json").read_text())
             if prev.get("ok") or prev.get("skipped"):
@@ -363,6 +398,7 @@ def main():
                        remat_policy=args.remat_policy, layout=args.layout,
                        fsdp=not args.no_fsdp, capacity=args.capacity,
                        seqpar=args.seqpar, terapipe_dp=args.terapipe_dp,
+                       virtual_stages=args.virtual_stages,
                        variant=args.variant)
         if not (rec.get("ok") or rec.get("skipped")):
             n_fail += 1

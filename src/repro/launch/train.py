@@ -38,21 +38,29 @@ def build_loss(model, specs, mesh, args):
     if args.mode == "terapipe" and args.dp_plan:
         # Algorithm 1 end-to-end: plan the slicing with the DP, execute it
         from repro.core.cost_model import AnalyticCostModel, TPU_V5E
-        from repro.core.dp import optimal_slicing
+        from repro.core.dp import optimal_slicing, pad_slice_count
         K = mesh.shape["pipe"]
         cm = AnalyticCostModel(model.cfg, TPU_V5E,
                                layers_per_stage=max(1, model.n_blocks // K))
         g = max(1, args.seq // 16)
-        plan = optimal_slicing(cm, args.seq, K, granularity=g)
-        slice_lens = tuple(plan.slices)
-        print(f"[dp-plan] slices {plan.slices} "
+        plan = optimal_slicing(cm, args.seq, K, granularity=g,
+                               virtual_stages=args.virtual_stages)
+        slices = plan.slices
+        if args.virtual_stages > 1 and \
+                (args.microbatches * len(slices)) % K:
+            # interleaved executability (D*M % K == 0): split the largest
+            # planned slices — never raises t_max, keeps the plan valid
+            slices = pad_slice_count(slices, K, granularity=g)
+        slice_lens = tuple(slices)
+        print(f"[dp-plan] slices {list(slice_lens)} "
               f"(predicted {plan.latency*1e3:.1f} ms/iter)")
     tcfg = TeraPipeConfig(
         n_token_slices=args.token_slices if args.mode == "terapipe" else 1,
         slice_lens=slice_lens,
         n_microbatches=args.microbatches,
         pipe_axis="pipe", tp_axis=None, data_axes=("data",),
-        unroll=args.unroll)
+        unroll=args.unroll,
+        virtual_stages=args.virtual_stages)
     loss_fn, _ = make_terapipe_loss(model, specs, mesh, tcfg, args.seq,
                                     args.batch)
     return loss_fn
@@ -74,6 +82,11 @@ def main(argv=None):
     ap.add_argument("--dp-plan", action="store_true",
                     help="plan slice lengths with the paper's DP (Alg. 1)")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="V layer chunks per pipeline rank (interleaved "
+                    "virtual-stage schedule; V=1 = contiguous TeraPipe). "
+                    "Needs microbatches*token-slices divisible by the pipe "
+                    "degree")
     ap.add_argument("--unroll", action="store_true",
                     help="unrolled tick loop (debug/differential testing; "
                     "trace time grows with D*M)")

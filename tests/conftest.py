@@ -9,6 +9,17 @@ import pytest
 # tests see ONE CPU device (dry-run device forcing must stay out of here)
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+# The suite manages its own device topology: the main pytest process must
+# see exactly one CPU device (test_system asserts it) and multi-device cases
+# re-exec in subprocesses with their own forcing.  Strip any INHERITED
+# forcing (e.g. CI exports XLA_FLAGS=--xla_force_host_platform_device_count
+# for direct module runs) before jax initializes.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" in _flags:
+    os.environ["XLA_FLAGS"] = " ".join(
+        f for f in _flags.split()
+        if not f.startswith("--xla_force_host_platform_device_count"))
+
 # ---------------------------------------------------------------------------
 # Per-test hard timeout ("timeout" ini key, see pyproject.toml).  When the
 # pytest-timeout plugin is installed it owns the key; this SIGALRM fallback

@@ -5,10 +5,11 @@ import pytest
 from _hyp import given, settings, st   # hypothesis or skip-stub (tests/_hyp.py)
 
 from repro.core.dp import (brute_force_slicing, joint_batch_token,
-                           optimal_slicing)
+                           optimal_slicing, pad_slice_count)
 from repro.core.cost_model import (AnalyticCostModel, BilinearFitCostModel,
                                    TPU_V5E, V100_AWS)
-from repro.core.simulator import eq5_latency, simulate
+from repro.core.simulator import (_lockstep_loop, _lockstep_total,
+                                  bubble_fraction, eq5_latency, simulate)
 from repro.core.schedule import SlicingScheme
 from repro.configs import get_config
 
@@ -131,6 +132,88 @@ def test_simulator_matches_eq5():
     sch = SlicingScheme.from_dp(2048, 1, [(1, slices)])
     sim = simulate(sch, 8, lambda b, l, c: cm(l, c))
     assert sim == pytest.approx(eq5_latency(slices, 8, cm), rel=1e-12)
+
+
+@pytest.mark.parametrize("K", [1, 2, 5, 8])
+def test_lockstep_vectorized_matches_loop(K):
+    """The numpy-broadcast lockstep tick sum equals the scalar reference
+    loop (random durations, random per-stage slowdowns), like _cost_matrix's
+    vectorization in PR 1."""
+    rng = np.random.default_rng(K)
+    for n in (1, 7, 23):
+        items = list(rng.uniform(0.5, 2.0, n))
+        slow = rng.uniform(1.0, 1.8, K)
+        loop = _lockstep_loop(items, K, slow)
+        vec = _lockstep_total(items, K, 1, slow)
+        assert vec == pytest.approx(loop, rel=1e-14), (K, n)
+
+
+def test_planner_virtual_stages_improves_bubble_dominated():
+    """Planning WITH the interleave-aware objective (bubble weight (K-1)/V)
+    must beat the V=1 plan when both are executed on the V=2 interleaved
+    schedule — the paper shape K=24 on gpt3-1b is bubble-dominated enough
+    that the optima differ (the V-aware plan takes fewer, longer slices)."""
+    cm = AnalyticCostModel(get_config("gpt3-1b"), V100_AWS, layers_per_stage=1)
+    K, L, g, V = 24, 2048, 128, 2
+    p1 = optimal_slicing(cm, L, K, granularity=g)
+    p2 = optimal_slicing(cm, L, K, granularity=g, virtual_stages=V)
+    assert sum(p2.slices) == L
+    assert len(p2.slices) < len(p1.slices), (p1.slices, p2.slices)
+    t = lambda b, l, c: cm(l, c)
+    # replicate each plan over K batch splits so the item count divides K
+    lat = {}
+    for name, p in (("v1", p1), ("v2", p2)):
+        sch = SlicingScheme.from_dp(L, K, [(1, p.slices)] * K)
+        lat[name] = simulate(sch, K, t, discipline="interleaved",
+                             virtual_stages=V)
+    assert lat["v2"] < lat["v1"], lat
+    # V=1 objective/behavior is bit-identical to the original Eq. 5 planner
+    assert optimal_slicing(cm, L, K, granularity=g,
+                           virtual_stages=1).latency == p1.latency
+
+
+def test_pad_slice_count_restores_executability():
+    """Interleaved runs need M % K == 0; the post-pass splits the largest
+    slices at granularity-aligned midpoints without raising t_max."""
+    slices = [704, 688, 656]                    # the paper's 3-slice scheme
+    out = pad_slice_count(slices, 4, granularity=8)
+    assert len(out) % 4 == 0
+    assert sum(out) == sum(slices)
+    assert max(out) <= max(slices)              # splitting never raises t_max
+    assert all(l % 8 == 0 and l >= 8 for l in out)
+    # already divisible: untouched
+    assert pad_slice_count([512, 512], 2, granularity=8) == [512, 512]
+    with pytest.raises(ValueError):
+        pad_slice_count([8, 8, 8], 4, granularity=8)   # nothing splittable
+
+
+def test_joint_virtual_stages_never_worse():
+    """The joint knapsack under the V-aware objective is <= the V=1 scheme
+    evaluated under the same objective (optimality), and its latency field
+    reflects the shrunken bubble weight."""
+    cfg = get_config("gpt3-13b")
+    K, L, B, V = 8, 512, 8, 2
+    def per_b(b):
+        return AnalyticCostModel(cfg, V100_AWS, layers_per_stage=2, batch=b)
+    r1 = joint_batch_token(per_b, L, B, K, granularity=64,
+                           batch_candidates=[1, 2, 4, 8])
+    r2 = joint_batch_token(per_b, L, B, K, granularity=64,
+                           batch_candidates=[1, 2, 4, 8], virtual_stages=V)
+    assert sum(b for b, _ in r2.scheme) == B
+    # evaluate r1's scheme under the V-aware objective: sum term + w*t_max
+    def obj_v(scheme):
+        total, tmax = 0.0, 0.0
+        for b, sl in scheme:
+            cm = per_b(b)
+            c = 0
+            for l in sl:
+                ti = cm(l, c)
+                total += ti
+                tmax = max(tmax, ti)
+                c += l
+        return total + (K - 1) / V * tmax
+    assert r2.latency <= obj_v(r1.scheme) + 1e-12
+    assert r2.latency <= r1.latency + 1e-12
 
 
 def test_lockstep_geq_async():

@@ -1,0 +1,110 @@
+"""Schedule IR (core/schedules): placement, tick geometry, bubble math."""
+import numpy as np
+import pytest
+
+from repro.core.schedules import (StageAssignment, contiguous, interleaved,
+                                  interleave_stacked)
+from repro.core.schedule import SlicingScheme
+from repro.core.simulator import bubble_fraction, simulate
+
+
+@pytest.mark.parametrize("K,V,N", [(2, 1, 8), (4, 1, 5), (2, 2, 8),
+                                   (4, 2, 8), (3, 4, 9), (1, 4, 6),
+                                   (8, 2, 16), (48, 4, 96)])
+def test_tick_table_valid(K, V, N):
+    """Every (work_item, stage) unit runs exactly once; each dependency is
+    produced on the ring predecessor exactly one tick earlier (the single
+    per-tick ppermute delivers it just in time)."""
+    a = StageAssignment(K, V, 24)
+    assert a.validate(N)
+    assert a.n_ticks(N) == N * V + K - 1
+
+
+def test_contiguous_reduces_to_diagonal():
+    """V=1 tick table is the classic diagonal: rank k runs item t-k."""
+    a = contiguous(4, 8)
+    tab = a.tick_table(6)
+    for t in range(tab.shape[0]):
+        for k in range(4):
+            i, v = tab[t, k]
+            if 0 <= t - k < 6:
+                assert (i, v) == (t - k, 0)
+            else:
+                assert (i, v) == (-1, -1)
+
+
+def test_interleaved_requires_group_divisibility():
+    a = interleaved(4, 2, 8)
+    with pytest.raises(AssertionError):
+        a.n_ticks(6)            # 6 items % 4 ranks != 0
+
+
+def test_unit_index_matches_tick_table():
+    """The executor's traced arithmetic and the host-side table agree."""
+    a = interleaved(3, 2, 12)
+    N = 6
+    tab = a.tick_table(N)
+    for k in range(a.n_ranks):
+        for t in range(a.n_ticks(N)):
+            u = t - k
+            if 0 <= u < a.n_units(N):
+                i, v = a.unit_index(u)
+                assert (tab[t, k] == (i, v)).all()
+
+
+def test_param_permutation_rank_major():
+    """Permuted stack is rank-major: rank k's rows are its V chunks
+    (global stages k, K+k, ...), each a contiguous layer run; and the
+    reshape+swapaxes fast path equals the index-array spec."""
+    a = interleaved(4, 2, 24)
+    perm = a.param_permutation()
+    b = a.blocks_per_chunk
+    for k in range(a.n_ranks):
+        rows = perm[k * a.virtual_stages * b:(k + 1) * a.virtual_stages * b]
+        for v in range(a.virtual_stages):
+            s = a.stage_of(k, v)
+            lo, hi = a.layer_rows(s)
+            assert (rows[v * b:(v + 1) * b] == np.arange(lo, hi)).all()
+    x = np.arange(a.n_padded * 5).reshape(a.n_padded, 5)
+    np.testing.assert_array_equal(interleave_stacked(x, a), x[perm])
+
+
+def test_padding_geometry():
+    """gpt3-1b-like: 24 layers on 16 ranks x 2 chunks -> 32 padded rows."""
+    a = interleaved(16, 2, 24)
+    assert a.blocks_per_chunk == 1
+    assert a.n_padded == 32 and a.n_pad == 8
+    assert a.n_stages == 32
+    assert a.rank_of_stage(17) == 1 and a.chunk_of_stage(17) == 1
+
+
+def test_bubble_fraction_closed_form_and_V_scaling():
+    """Uniform slices, constant cost: lockstep bubble is exactly
+    (K-1)/(N+K-1); interleaved is (K-1)/V / (N + (K-1)/V) ~ contiguous/V."""
+    K, N_b, M = 8, 8, 8                     # 64 work items
+    t = lambda b, l, c: 1.0                 # constant per-stage cost
+    sch = SlicingScheme.uniform(64, N_b, n_token_slices=M, microbatch=1)
+    N = N_b * M
+    b1 = bubble_fraction(sch, K, t, discipline="lockstep")
+    assert b1 == pytest.approx((K - 1) / (N + K - 1), rel=1e-12)
+    for V in (2, 4):
+        bV = bubble_fraction(sch, K, t, discipline="interleaved",
+                             virtual_stages=V)
+        w = (K - 1) / V
+        assert bV == pytest.approx(w / (N + w), rel=1e-12)
+        # the headline claim: bubble ~ contiguous/V (up to the smaller
+        # denominator, a (K-1)/N relative effect)
+        assert bV == pytest.approx(b1 / V, rel=(K - 1) / N + 1e-9)
+        assert bV < b1 / V * (1 + (K - 1) / N)
+
+
+def test_interleaved_total_latency_shrinks_bubble_only():
+    """T_V = N*t + (K-1)*t/V for uniform unit costs: the work term is
+    invariant, only the fill/drain term divides by V."""
+    K, N = 6, 12
+    t = lambda b, l, c: 1.0
+    sch = SlicingScheme.uniform(32, N, n_token_slices=1, microbatch=1)
+    for V in (1, 2, 3):
+        d = "lockstep" if V == 1 else "interleaved"
+        T = simulate(sch, K, t, discipline=d, virtual_stages=V)
+        assert T == pytest.approx(N + (K - 1) / V, rel=1e-12)
