@@ -15,10 +15,12 @@ bench-dp:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 
 # fast self-asserting benchmarks (CI): DP scheduler timings + vectorized
-# cost-matrix check, and the interleaved-schedule bubble assertions
+# cost-matrix check, the interleaved-schedule bubble assertions, and the
+# 1F1B compiled peak-memory assertions (flat in D vs contiguous's growth)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 	PYTHONPATH=src $(PY) benchmarks/interleave_bench.py --assert-only
+	PYTHONPATH=src $(PY) benchmarks/memory_bench.py --quick
 
 # rolled vs unrolled tick-executor trace/lower wall-time report
 dryrun-executors:

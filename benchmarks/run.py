@@ -12,7 +12,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 SUITES = ["table2_main", "table3_dp_ablation", "table4_seqlen",
           "fig3_slice_throughput", "dp_bench", "interleave_bench",
-          "kernel_bench", "train_bench"]
+          "memory_bench", "kernel_bench", "train_bench"]
 
 
 def main() -> None:

@@ -164,6 +164,32 @@ def pad_slice_count(slices: Sequence[int], multiple_of: int, *,
     return out
 
 
+def ensure_executable(slices: Sequence[int], *, schedule: str, n_ranks: int,
+                      n_microbatches: int = 1,
+                      granularity: int = 1) -> List[int]:
+    """Post-pass making a planned slice list executable under ``schedule``.
+
+    Algorithm 1 optimizes latency only; each schedule adds its own
+    structural constraint on the plan:
+
+    * ``contiguous`` — none; the plan is returned unchanged.
+    * ``interleaved`` — work items advance in ring groups of K, so the
+      work-item count D·M must divide by the pipe degree:
+      :func:`pad_slice_count` splits the largest slices (never raises
+      t_max) until ``(D·M) % K == 0``.
+    * ``1f1b`` — the fwd+bwd table needs no divisibility (V=1), but every
+      microbatch must have the SAME slice count M (the bwd turnaround is a
+      single M in the timing) — true by construction here, since one plan
+      is replicated across microbatches.  Returned unchanged.
+    """
+    out = list(slices)
+    if schedule == "interleaved" and (n_microbatches * len(out)) % n_ranks:
+        # D copies of the plan run; M only needs to clear K / gcd(D, K)
+        need = n_ranks // np.gcd(n_microbatches, n_ranks)
+        out = pad_slice_count(out, need, granularity=granularity)
+    return out
+
+
 def brute_force_slicing(t_fwd, L: int, K: int, *, granularity: int = 1
                         ) -> DPResult:
     """Exponential oracle for tests (L/g ≤ ~12)."""

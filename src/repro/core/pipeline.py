@@ -11,13 +11,37 @@ The paper's execution model (§3.2), adapted TPU-native (DESIGN.md §3):
   the *current* microbatch it has already processed — the paper's attention
   context t_fwd(l, ctx).
 * Stages run in SPMD lockstep: a tick is one program region bounded by the
-  ppermute.  The whole (fwd ticks → loss → bwd ticks) program is a single
-  differentiable function; the reverse pipeline emerges from autodiff (the
-  transpose of ppermute is the reverse ppermute).
+  ppermute.
+
+Which units run when comes from the schedule IR
+(``core/schedules.StageAssignment``), selected by ``TeraPipeConfig.schedule``:
+
+* ``contiguous`` (V=1) — the paper's TeraPipe schedule.  The whole
+  (fwd ticks → loss → bwd ticks) program is a single differentiable
+  function; the reverse pipeline emerges from autodiff (the transpose of
+  ppermute is the reverse ppermute).  Every tick's saved residuals stay
+  live until the drain: peak activation memory grows with D·M.
+* ``interleaved`` (V≥2) — Megatron-style virtual pipeline: each rank holds V
+  round-robin layer chunks, the ppermute ring is traversed V times per work
+  item, and the fill/drain bubble shrinks by ~V.  Backward still via
+  whole-program autodiff (live memory O(D·M·V)).
+* ``1f1b`` — memory-bounded schedule (``schedules.OneFOneB``): the tick
+  table contains explicit BACKWARD units interleaved 1F1B-style with the
+  forwards.  The executor runs each bwd unit as a per-unit ``jax.vjp``
+  inside the tick (recompute-from-saved-inputs: stage-granular activation
+  checkpointing), accumulates grads in the scan carry, and keeps saved
+  inputs in a ring-buffered residual store of depth
+  ``O(min(D·M, K + M - 1))`` — peak live activations bounded by the
+  pipeline depth + per-microbatch turnaround instead of the work-item
+  count.  Cotangents flow down a second, REVERSE ppermute ring.  Built by
+  :func:`make_terapipe_value_and_grad` (the program computes loss AND
+  grads; it is not differentiated again).
 
 Within a stage, optional Megatron-style tensor parallelism over a ``tp``
 mesh axis: weights arrive head/ff/expert-sharded and the block fns psum
-partial outputs (see models/* with cfg.tp_axis).
+partial outputs (see models/* with cfg.tp_axis).  (Not yet supported for
+``1f1b`` — the per-slice head loss and explicit grad psums need per-leaf
+tp-aware reductions.)
 
 GPipe (the paper's baseline) is the D>1, M=1 special case.
 
@@ -25,41 +49,42 @@ Executor design (rolled tick loop)
 ----------------------------------
 
 The tick loop is ROLLED with ``jax.lax.scan`` over the tick index, so XLA
-traces and compiles ONE tick program regardless of ``V*(D*M) + K - 1`` — the
+traces and compiles ONE tick program regardless of the tick count — the
 large-M schemes the DP planner (§3.3) emits stay cheap to trace/compile.
 
-The schedule itself (which layer chunks live on which rank, and which
-``(work_item, chunk)`` a rank runs at each tick) comes from the schedule IR
-(``core/schedules.StageAssignment``): V=1 is the paper's contiguous
-TeraPipe schedule, ``TeraPipeConfig.virtual_stages`` V>=2 the Megatron-style
-interleaved virtual pipeline (each rank holds V round-robin layer chunks;
-the ppermute ring is traversed V times per work item; the fill/drain bubble
-shrinks by ~V because idle ticks cost one *chunk*, not one full stage).
-
-* Carry layout: ``(x_prev, caches, outbuf)`` —
+* Carry layout (fwd-only schedules): ``(x_prev, caches, outbuf)`` —
   - ``x_prev``  (mb, l, d)        activation received from the previous
                                   stage at the end of the last tick;
   - ``caches``  per-layer pytree  KV / SSM / LRU state of the current
                                   microbatch prefix; stacked on bps for V=1,
                                   on a per-chunk leading axis (V, bps, ...)
                                   for V>1 (each chunk keeps its own prefix);
-  - ``outbuf``  (D*M, mb, l, d)   per-work-item output ring written by the
-                                  last stage (other stages write garbage
-                                  that reassembly never reads; under
-                                  interleaving a rank writes each item V
-                                  times and the final chunk lands last).
-* The unit ``u = t - k_rank`` maps to ``(work_item, chunk)`` via
+  - ``outbuf``  (D*M+1, mb, l, d) per-work-item output ring written by the
+                                  last stage; row D*M is a dump row that
+                                  absorbs idle-tick writes (other stages
+                                  write garbage that reassembly never
+                                  reads; under interleaving a rank writes
+                                  each item V times, final chunk last).
+* The unit ``u = t - k_rank`` maps to ``(work_item, chunk, is_bwd)`` via
   ``StageAssignment.unit_index`` (pure arithmetic on the traced tick index);
   its ``(mb_idx, sl_idx, ctx)`` follow as before, with non-uniform slice
   offsets from ``starts`` as a captured device array indexed with
   ``jnp.take``.  For V>1 the chunk's params/caches are gathered per tick
   with ``dynamic_index_in_dim`` from pipe-sharded rank-major chunk stacks —
-  the body stays shape-stable, so it still traces once.
+  the body stays shape-stable, so it still traces once.  The 1F1B table is
+  rank-dependent (fwd/bwd interleave by rank parity), so that executor
+  gathers per-tick ``(item, kind)`` from the precomputed table instead.
+* Cache mutation is gated on ``valid``: idle (fill/drain) ticks leave the
+  cache carry BIT-IDENTICAL.  (Before this gating, the ``fresh`` zeroing
+  and the V>1 chunk write-back also ran on idle ticks and were correct
+  only because clamped-invalid units aliased unit 0, whose cache was
+  already zero — a coincidence the 1F1B executor breaks: its bwd ticks
+  must never touch the forward cache.)
 * Double-buffered send/recv: the ``ppermute`` on ``x_out`` is issued as soon
-  as the stage output exists, BEFORE the outbuf write (and, with
-  ``skip_bubbles=False``, the cache merge) — those consume the previous
-  buffer generation, so XLA's async collective-permute-start/-done pair
-  overlaps the wire transfer with the trailing per-tick bookkeeping.
+  as the stage output exists, BEFORE the outbuf write (and the cache
+  merge) — those consume the previous buffer generation, so XLA's async
+  collective-permute-start/-done pair overlaps the wire transfer with the
+  trailing per-tick bookkeeping.
 * Requirement on block fns: shape-stable across ticks (every slice runs in
   an ``l_max``-padded buffer; ``ctx`` is traced, so attention uses the
   ``sliced_dyn`` dynamic-slice path).
@@ -71,21 +96,24 @@ inspecting a single tick's HLO.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
-from repro.core.schedules import StageAssignment, interleave_stacked
+from repro.core.schedules import (OneFOneB, StageAssignment,
+                                  interleave_stacked)
 from repro.models import Model, build_model
-from repro.models.common import ModelConfig
+from repro.models.common import ModelConfig, rms_norm
 from repro.models.lm import _scan_full
 
 # logical axis -> pipeline mesh axis mapping for TP-sharded stage weights
 _TP_LOGICAL = ("heads", "ff", "experts")
+
+SCHEDULES = ("contiguous", "interleaved", "1f1b")
 
 
 @dataclasses.dataclass
@@ -107,8 +135,8 @@ class TeraPipeConfig:
     # instead of masked garbage compute.  Disable only for debugging.
     skip_bubbles: bool = True
     # Python-unroll the tick loop (one jaxpr copy per tick) instead of the
-    # rolled lax.scan executor.  Trace/compile cost grows with D*M + K - 1;
-    # differential-testing / HLO-inspection escape hatch only.
+    # rolled lax.scan executor.  Trace/compile cost grows with the tick
+    # count; differential-testing / HLO-inspection escape hatch only.
     unroll: bool = False
     # V: virtual pipeline stages (Megatron-LM interleaving, via the schedule
     # IR in core/schedules).  Each rank holds V non-contiguous layer chunks
@@ -117,6 +145,13 @@ class TeraPipeConfig:
     # at the cost of V ring hops per item.  V=1 is the paper's contiguous
     # schedule; V>1 requires D*M divisible by the pipe degree K.
     virtual_stages: int = 1
+    # which schedule table drives the tick loop; "contiguous" with
+    # virtual_stages>1 is promoted to "interleaved" for back-compat
+    schedule: str = "contiguous"
+    # debug: extra all-idle ticks appended to the tick loop.  With correctly
+    # gated cache mutation they are exact no-ops (tests assert bit-identical
+    # final caches); never needed in production.
+    extra_ticks: int = 0
 
 
 def _group_split(model: Model):
@@ -156,88 +191,215 @@ def _leaf_pspec(spec: Tuple, tp_axis, tp_size: int, pipe_axis, cfg: ModelConfig)
     return P(*out)
 
 
-def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
-                       seq_len: int, global_batch: int):
-    """Returns loss_fn(params, batch) implementing the pipelined step, plus
-    the param sharding tree (NamedShardings) for jit in_shardings."""
-    cfg = model.cfg
-    K = mesh.shape[tcfg.pipe_axis]
-    tp = mesh.shape[tcfg.tp_axis] if tcfg.tp_axis else 1
-    data = 1
-    for a in tcfg.data_axes:
-        data *= mesh.shape[a]
-    D = tcfg.n_microbatches
-    L, B = seq_len, global_batch
-    if tcfg.slice_lens is not None:
-        slice_lens = tuple(tcfg.slice_lens)
-        assert sum(slice_lens) == L, (slice_lens, L)
-        M = len(slice_lens)
-        l = max(slice_lens)                      # padded slice buffer length
-        uniform = all(s == l for s in slice_lens)
-        if not uniform:
-            assert model.cfg.family in ("dense", "vlm", "moe"), \
-                "non-uniform slices need prefix-overwrite semantics (KV " \
-                "caches); state-based families require uniform slices"
-        starts = [0]
-        for s in slice_lens[:-1]:
-            starts.append(starts[-1] + s)
-    else:
-        M = tcfg.n_token_slices
-        assert L % M == 0, (L, M)
-        l = L // M
-        slice_lens = tuple([l] * M)
-        starts = [i * l for i in range(M)]
-    assert B % (data * D) == 0, (B, data, D)
-    mb_local = B // (data * D)
-    b_local = B // data
-    d_model = cfg.d_model
+class _Plan:
+    """Everything both executors derive from (model, mesh, tcfg, shapes):
+    slice geometry, schedule assignment, local model, param specs."""
 
-    pre, main, post = _group_split(model)
-    n_main = main.count
-    V = tcfg.virtual_stages
-    assign = StageAssignment(n_ranks=K, virtual_stages=V, n_layers=n_main)
-    bps = assign.blocks_per_chunk              # blocks per (virtual) stage
-    n_pad = assign.n_pad
+    def __init__(self, model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
+                 seq_len: int, global_batch: int):
+        cfg = model.cfg
+        self.model, self.cfg, self.mesh, self.tcfg = model, cfg, mesh, tcfg
+        self.K = K = mesh.shape[tcfg.pipe_axis]
+        self.tp = tp = mesh.shape[tcfg.tp_axis] if tcfg.tp_axis else 1
+        data = 1
+        for a in tcfg.data_axes:
+            data *= mesh.shape[a]
+        self.data = data
+        self.D = D = tcfg.n_microbatches
+        self.L, self.B = L, B = seq_len, global_batch
 
-    # local-config model: block fns see TP-local head counts inside shard_map
-    if tp > 1:
-        assert cfg.n_heads % tp == 0, (cfg.n_heads, tp)
-        kv_local = (cfg.n_kv_heads // tp if cfg.n_kv_heads % tp == 0
-                    else cfg.n_kv_heads)
-        cfg_local = cfg.replace(tp_axis=tcfg.tp_axis,
-                                head_dim=cfg.hd,      # pin: hd derives from
-                                n_heads=cfg.n_heads // tp,  # n_heads otherwise
-                                n_kv_heads=kv_local)
-    else:
-        cfg_local = cfg
-    model_local = build_model(cfg_local)
-    main_local = next(g for g in model_local.groups if g.name == main.name)
-    block_fn = main_local.sliced_dyn or main_local.sliced
+        sched = tcfg.schedule
+        V = tcfg.virtual_stages
+        if sched == "contiguous" and V > 1:
+            sched = "interleaved"    # back-compat: V>1 implies interleaving
+        assert sched in SCHEDULES, (sched, SCHEDULES)
+        if sched == "interleaved":
+            assert V >= 2, (
+                f"schedule='interleaved' needs virtual_stages >= 2, got {V}")
+        if sched == "1f1b":
+            assert V == 1, "1F1B is a V=1 schedule (see schedules.OneFOneB)"
+        self.sched, self.V = sched, V
 
-    main_spec_tree = specs["groups"][main.name]
-    is_spec = lambda s: isinstance(s, tuple)
-    stage_in_specs = jax.tree.map(
-        lambda s: _leaf_pspec(s, tcfg.tp_axis, tp, tcfg.pipe_axis, cfg),
-        main_spec_tree, is_leaf=is_spec)
+        if tcfg.slice_lens is not None:
+            slice_lens = tuple(tcfg.slice_lens)
+            assert sum(slice_lens) == L, (slice_lens, L)
+            M = len(slice_lens)
+            l = max(slice_lens)                  # padded slice buffer length
+            uniform = all(s == l for s in slice_lens)
+            if not uniform:
+                assert cfg.family in ("dense", "vlm", "moe"), \
+                    "non-uniform slices need prefix-overwrite semantics (KV " \
+                    "caches); state-based families require uniform slices"
+            starts = [0]
+            for s in slice_lens[:-1]:
+                starts.append(starts[-1] + s)
+        else:
+            M = tcfg.n_token_slices
+            assert L % M == 0, (L, M)
+            l = L // M
+            slice_lens = tuple([l] * M)
+            starts = [i * l for i in range(M)]
+        self.slice_lens, self.M, self.l = slice_lens, M, l
+        self.starts, self.uniform = starts, all(s == l for s in slice_lens)
+        assert B % (data * D) == 0, (B, data, D)
+        self.mb_local = B // (data * D)
+        self.b_local = B // data
+        self.d_model = cfg.d_model
 
-    # batch activations: sharded over data axes, replicated over pipe/tp
-    x_spec = P(tcfg.data_axes, None, None)
-    DM = D * M
-    if V > 1:
-        assert DM % K == 0, (
-            f"virtual_stages={V} needs D*M = {D}*{M} = {DM} divisible by the "
-            f"pipe degree K={K}: interleaved work items advance in ring "
-            f"groups of K (see core/schedules)")
-    n_units = assign.n_units(DM)               # per-rank units (= DM * V)
-    ticks = assign.n_ticks(DM)
+        self.pre, self.main, self.post = _group_split(model)
+        n_main = self.main.count
+        if sched == "1f1b":
+            self.assign = OneFOneB(n_ranks=K, virtual_stages=1,
+                                   n_layers=n_main, n_microbatches=D)
+        else:
+            self.assign = StageAssignment(n_ranks=K, virtual_stages=V,
+                                          n_layers=n_main)
+        self.bps = self.assign.blocks_per_chunk
+        self.n_pad = self.assign.n_pad
+        self.n_main = n_main
 
-    # ---- the SPMD pipeline body (per-device program) ----
-    uniform_slices = all(s == l for s in slice_lens)
-    starts_arr_host = starts
-    # padded caches: a short slice's garbage tail may write up to l beyond
-    # its ctx; pad the cache so the LAST slice's tail never wraps onto valid
-    # entries (overwritten-before-read invariant, DESIGN §3)
-    cache_len = L if uniform_slices else L + l
+        # local-config model: block fns see TP-local head counts in shard_map
+        if tp > 1:
+            assert cfg.n_heads % tp == 0, (cfg.n_heads, tp)
+            kv_local = (cfg.n_kv_heads // tp if cfg.n_kv_heads % tp == 0
+                        else cfg.n_kv_heads)
+            cfg_local = cfg.replace(tp_axis=tcfg.tp_axis,
+                                    head_dim=cfg.hd,    # pin: hd derives from
+                                    n_heads=cfg.n_heads // tp,  # n_heads else
+                                    n_kv_heads=kv_local)
+        else:
+            cfg_local = cfg
+        model_local = build_model(cfg_local)
+        self.main_local = next(g for g in model_local.groups
+                               if g.name == self.main.name)
+        self.block_fn = self.main_local.sliced_dyn or self.main_local.sliced
+
+        main_spec_tree = specs["groups"][self.main.name]
+        self.is_spec = is_spec = lambda s: isinstance(s, tuple)
+        self.stage_in_specs = jax.tree.map(
+            lambda s: _leaf_pspec(s, tcfg.tp_axis, tp, tcfg.pipe_axis, cfg),
+            main_spec_tree, is_leaf=is_spec)
+
+        # batch activations: sharded over data axes, replicated over pipe/tp
+        self.x_spec = P(tcfg.data_axes, None, None)
+        self.DM = DM = D * M
+        if V > 1:
+            assert DM % K == 0, (
+                f"virtual_stages={V} needs D*M = {D}*{M} = {DM} divisible by "
+                f"the pipe degree K={K}: interleaved work items advance in "
+                f"ring groups of K (see core/schedules)")
+        # padded caches: a short slice's garbage tail may write up to l
+        # beyond its ctx; pad the cache so the LAST slice's tail never wraps
+        # onto valid entries (overwritten-before-read invariant, DESIGN §3)
+        self.cache_len = L if self.uniform else L + l
+
+    def prefix(self, params, batch):
+        """Shared pre-pipeline prologue: embed -> pre groups -> activation
+        dtype -> (non-uniform) seq pad so a short slice's l_max-window never
+        clamps (dynamic_slice clamps OOB starts, which would alias real
+        data).  Pure in (params, batch) — the 1F1B executor differentiates
+        it with jax.vjp for the embedding/pre-group grads."""
+        x = self.model.embed(params, batch, 0)
+        for g in self.pre:
+            x = _scan_full(g, params["groups"][g.name], x, self.cfg.remat)
+        x = x.astype(self.cfg.dtype)
+        if not self.uniform:
+            x = jnp.pad(x, ((0, 0), (0, self.l), (0, 0)))
+        return x
+
+    def stage_apply(self, params_c, x, caches_c, ctx):
+        """One layer-chunk forward (scan over the chunk's blocks)."""
+        block_fn, remat = self.block_fn, self.cfg.remat
+
+        def body(h, inp):
+            bp_l, c_l = inp
+            h, c_l = block_fn(bp_l, h, c_l, ctx)
+            return h, c_l
+        body_fn = jax.checkpoint(body) if remat else body
+        x, caches_c = jax.lax.scan(body_fn, x, (params_c, caches_c))
+        return x, caches_c
+
+    def init_stage_caches(self, lead: Tuple[int, ...]):
+        """Zero per-chunk cache pytree with the given leading axes."""
+        cache_struct = jax.eval_shape(
+            lambda: self.main_local.init_cache(
+                self.mb_local, self.cache_len, self.tcfg.cache_dtype))
+        return jax.tree.map(
+            lambda a: jnp.zeros(lead + a.shape[1:], a.dtype), cache_struct)
+
+    def prep_stage_params(self, stage_params):
+        """Pad the stacked main group to the schedule's row count and (V>1)
+        reorder rank-major, constrained straight to the pipe-sharded layout.
+
+        NB: must be jnp.pad, NOT concatenate-with-zeros — XLA mispartitions
+        the concat feeding a shard_map operand on multi-axis meshes
+        (data>1 x pipe, observed on jax 0.4.37: garbage stage params).
+        interleave_stacked is reshape+swapaxes for the same reason."""
+        if not (self.n_pad or self.V > 1):
+            return stage_params
+
+        def _prep(a, sp):
+            if self.n_pad:
+                a = jnp.pad(a, ((0, self.n_pad),) + ((0, 0),) * (a.ndim - 1))
+            if self.V > 1:
+                a = interleave_stacked(a, self.assign)
+            return jax.lax.with_sharding_constraint(
+                a, NamedSharding(self.mesh, sp))
+        return jax.tree.map(_prep, stage_params, self.stage_in_specs)
+
+    def param_shardings_fn(self):
+        tcfg, cfg, mesh = self.tcfg, self.cfg, self.mesh
+        n_main, K, tp, is_spec = self.n_main, self.K, self.tp, self.is_spec
+        main_name = self.main.name
+
+        def param_shardings(params_tree_specs):
+            """NamedSharding tree for jit in_shardings (stage params
+            pipe-sharded, everything else replicated/TP per logical spec)."""
+            # main group: pipe on layer axis (+tp); others replicated.  When
+            # the UNPADDED stack is not divisible by the pipe degree (e.g.
+            # gpt3-1b's 24 layers on pipe=16) a pipe-sharded in_sharding
+            # would be rejected at the jit boundary — keep the layer axis
+            # replicated there and let the loss re-shard at the pad boundary
+            # (the with_sharding_constraint in prep_stage_params).
+            def build(spec, in_main):
+                if in_main:
+                    ps = _leaf_pspec(spec, tcfg.tp_axis, tp, tcfg.pipe_axis,
+                                     cfg)
+                    if n_main % K:
+                        ps = P(None, *tuple(ps)[1:])
+                    return NamedSharding(mesh, ps)
+                return NamedSharding(mesh, P())
+            out = {}
+            for key, sub in params_tree_specs.items():
+                if key == "groups":
+                    out["groups"] = {
+                        gname: jax.tree.map(
+                            lambda s: build(s, gname == main_name),
+                            gspec, is_leaf=is_spec)
+                        for gname, gspec in sub.items()}
+                else:
+                    out[key] = jax.tree.map(
+                        lambda s: NamedSharding(mesh, P()), sub,
+                        is_leaf=is_spec)
+            return out
+        return param_shardings
+
+
+# ---------------------------------------------------------------------------
+# forward-only executor (contiguous / interleaved; bwd via autodiff)
+# ---------------------------------------------------------------------------
+def _make_forward_pipeline(p: _Plan):
+    """Per-device pipeline body for the fwd-only schedules.  Returns
+    (outbuf, final_caches); wrappers select which output crosses the
+    shard_map boundary."""
+    tcfg, cfg = p.tcfg, p.cfg
+    K, V, M, l, DM = p.K, p.V, p.M, p.l, p.DM
+    mb_local, d_model = p.mb_local, p.d_model
+    assign, bps = p.assign, p.bps
+    n_units = assign.n_units(DM)
+    ticks = assign.n_ticks(DM) + tcfg.extra_ticks
+    starts_arr_host = p.starts
+    uniform_slices = p.uniform
 
     def pipeline_body(stage_params, x_emb):
         k_rank = jax.lax.axis_index(tcfg.pipe_axis)
@@ -245,25 +407,14 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
         # per-layer cache struct (from the local model), re-led with bps
         # (and, for V>1, a per-chunk leading axis: each of the rank's V
         # chunks keeps its own microbatch-prefix state)
-        cache_struct = jax.eval_shape(
-            lambda: main_local.init_cache(mb_local, cache_len, tcfg.cache_dtype))
-        lead = (V, bps) if V > 1 else (bps,)
-        caches = jax.tree.map(
-            lambda a: jnp.zeros(lead + a.shape[1:], a.dtype), cache_struct)
+        caches = p.init_stage_caches((V, bps) if V > 1 else (bps,))
         if V > 1:
             # the local stack arrives rank-major chunk order (see loss_fn):
             # (V*bps, ...) -> (V, bps, ...) so a tick can gather its chunk
-            stage_params = jax.tree.map(
+            stage_params_c = jax.tree.map(
                 lambda a: a.reshape((V, bps) + a.shape[1:]), stage_params)
-
-        def stage_apply(params_c, x, caches_c, ctx):
-            def body(h, inp):
-                bp_l, c_l = inp
-                h, c_l = block_fn(bp_l, h, c_l, ctx)
-                return h, c_l
-            body_fn = jax.checkpoint(body) if cfg.remat else body
-            x, caches_c = jax.lax.scan(body_fn, x, (params_c, caches_c))
-            return x, caches_c
+        else:
+            stage_params_c = stage_params
 
         def tick(carry, t):
             """One pipeline tick.  ``t`` is traced — the body is shape-stable
@@ -272,7 +423,7 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
             u = t - k_rank                             # per-rank unit id
             valid = (u >= 0) & (u < n_units)
             u_c = jnp.clip(u, 0, n_units - 1)
-            i_c, v_idx = assign.unit_index(u_c)        # (work item, chunk)
+            i_c, v_idx, _ = assign.unit_index(u_c)     # (work item, chunk)
             mb_idx, sl_idx = i_c // M, i_c % M
             ctx = jnp.take(starts_arr, sl_idx) if not uniform_slices \
                 else sl_idx * l
@@ -280,7 +431,7 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
                 x_emb, (mb_idx * mb_local, ctx, 0), (mb_local, l, d_model))
             if V == 1:
                 x_in = jnp.where(k_rank == 0, x0, x_prev)
-                params_c, caches_c = stage_params, caches
+                params_c, caches_c = stage_params_c, caches
             else:
                 # chunk 0 of rank 0 admits new work; every other (rank,
                 # chunk) consumes the ring — rank 0 chunk v>0 receives the
@@ -288,14 +439,16 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
                 x_in = jnp.where((k_rank == 0) & (v_idx == 0), x0, x_prev)
                 params_c = jax.tree.map(
                     lambda a: jax.lax.dynamic_index_in_dim(
-                        a, v_idx, 0, keepdims=False), stage_params)
+                        a, v_idx, 0, keepdims=False), stage_params_c)
                 caches_c = jax.tree.map(
                     lambda a: jax.lax.dynamic_index_in_dim(
                         a, v_idx, 0, keepdims=False), caches)
             # new microbatch => fresh prefix: zero the caches.  Required for
             # state-based families (SSM/LRU carry real state); harmless and
             # exact for KV caches (masked by absolute positions anyway).
-            fresh = sl_idx == 0
+            # GATED ON ``valid``: an idle tick must not mutate cache state
+            # (see module docstring — the 1F1B executor relies on this).
+            fresh = (sl_idx == 0) & valid
             caches_c = jax.tree.map(
                 lambda c: jnp.where(jnp.reshape(fresh, (1,) * c.ndim),
                                     jnp.zeros_like(c), c), caches_c)
@@ -303,11 +456,12 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
                 # idle (fill/drain) ticks take the cheap branch at runtime
                 x_out, caches_c = jax.lax.cond(
                     valid,
-                    lambda xi, cs: stage_apply(params_c, xi, cs, ctx),
+                    lambda xi, cs: p.stage_apply(params_c, xi, cs, ctx),
                     lambda xi, cs: (xi, cs),
                     x_in, caches_c)
             else:
-                x_out, caches_new = stage_apply(params_c, x_in, caches_c, ctx)
+                x_out, caches_new = p.stage_apply(params_c, x_in, caches_c,
+                                                  ctx)
                 caches_c = jax.tree.map(
                     lambda new, old: jnp.where(
                         jnp.reshape(valid, (1,) * new.ndim), new, old),
@@ -323,70 +477,70 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
                 caches = jax.tree.map(
                     lambda cs, c: jax.lax.dynamic_update_index_in_dim(
                         cs, c, v_idx, 0), caches, caches_c)
-            # always-write (clamped): only the last stage's buffer is read,
-            # and for it every valid item overwrites any earlier garbage
-            # (under interleaving, writes for an item ascend in chunk order,
-            # so the final chunk V-1 lands last)
+            # always-write, with idle ticks routed to the dump row DM: only
+            # the last stage's rows 0..DM-1 are read, and for them every
+            # valid item overwrites any earlier garbage (under interleaving,
+            # writes for an item ascend in chunk order, so the final chunk
+            # V-1 lands last)
+            row = jnp.where(valid, i_c, DM)
             outbuf = jax.lax.dynamic_update_slice(
-                outbuf, x_out[None], (i_c, 0, 0, 0))
+                outbuf, x_out[None], (row, 0, 0, 0))
             return (x_next, caches, outbuf), None
 
         carry = (jnp.zeros((mb_local, l, d_model), cfg.dtype),   # x_prev
                  caches,
-                 jnp.zeros((DM, mb_local, l, d_model), cfg.dtype))  # outbuf
+                 jnp.zeros((DM + 1, mb_local, l, d_model), cfg.dtype))
         if tcfg.unroll:
-            for t in range(ticks):               # escape hatch: jaxpr ~ O(ticks)
+            for t in range(ticks):              # escape hatch: jaxpr O(ticks)
                 carry, _ = tick(carry, jnp.int32(t))
         else:
             carry, _ = jax.lax.scan(tick, carry,
                                     jnp.arange(ticks, dtype=jnp.int32))
-        return carry[2]
+        return carry[2], carry[1]
 
+    return pipeline_body
+
+
+def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
+                       seq_len: int, global_batch: int):
+    """Returns loss_fn(params, batch) implementing the pipelined step, plus
+    the param sharding tree (NamedShardings) for jit in_shardings.
+
+    Forward-only schedules (contiguous / interleaved): differentiate the
+    returned loss with ``jax.value_and_grad`` as usual.  For the 1F1B
+    schedule use :func:`make_terapipe_value_and_grad` — its backward pass is
+    explicit in the tick table, not an autodiff transpose of this function.
+    """
+    p = _Plan(model, specs, mesh, tcfg, seq_len, global_batch)
+    assert p.sched != "1f1b", (
+        "schedule='1f1b' computes loss AND grads in one pipelined program; "
+        "build it with make_terapipe_value_and_grad")
+    cfg = p.cfg
+    K, D, M, l, DM = p.K, p.D, p.M, p.l, p.DM
+    data, mb_local, d_model = p.data, p.mb_local, p.d_model
+    L, B, slice_lens = p.L, p.B, p.slice_lens
+    main, post = p.main, p.post
+
+    pipeline_body = _make_forward_pipeline(p)
     out_specs = P(tcfg.pipe_axis, tcfg.data_axes, None, None)
     shmap = compat_shard_map(
-        pipeline_body, mesh=mesh,
-        in_specs=(stage_in_specs, x_spec),
+        lambda sp, x: pipeline_body(sp, x)[0], mesh=mesh,
+        in_specs=(p.stage_in_specs, p.x_spec),
         out_specs=out_specs, check_vma=False)
 
     def loss_fn(params, batch):
-        x = model.embed(params, batch, 0)
-        for g in pre:
-            x = _scan_full(g, params["groups"][g.name], x, cfg.remat)
-        x = x.astype(cfg.dtype)
-        if not uniform_slices:
-            # pad the seq dim so a short slice's l_max-window never clamps
-            # (dynamic_slice clamps OOB starts, which would alias real data)
-            x = jnp.pad(x, ((0, 0), (0, l), (0, 0)))
-
-        stage_params = params["groups"][main.name]
-        if n_pad or V > 1:
-            # zero blocks are exact identities (residual blocks, see DESIGN);
-            # constrain the result straight to the pipe-sharded layout so the
-            # pad/permute does not bounce through a replicated intermediate.
-            # NB: must be jnp.pad, NOT concatenate-with-zeros — XLA
-            # mispartitions the concat feeding a shard_map operand on
-            # multi-axis meshes (data>1 x pipe, observed on jax 0.4.37:
-            # garbage stage params).  interleave_stacked is reshape+swapaxes
-            # for the same reason (no gather).
-            def _prep(a, sp):
-                if n_pad:
-                    a = jnp.pad(a, ((0, n_pad),) + ((0, 0),) * (a.ndim - 1))
-                if V > 1:
-                    # stage-major -> rank-major chunk order, so the plain
-                    # pipe-sharding below hands rank k its V chunks
-                    a = interleave_stacked(a, assign)
-                return jax.lax.with_sharding_constraint(
-                    a, NamedSharding(mesh, sp))
-            stage_params = jax.tree.map(_prep, stage_params, stage_in_specs)
-
+        x = p.prefix(params, batch)
+        stage_params = p.prep_stage_params(params["groups"][main.name])
         out = shmap(stage_params, x)
-        out_last = jax.lax.slice_in_dim(out, (K - 1) * DM, K * DM, axis=0)
+        rows = DM + 1                         # incl. the idle-tick dump row
+        out_last = jax.lax.slice_in_dim(out, (K - 1) * rows,
+                                        (K - 1) * rows + DM, axis=0)
         # (D*M, B/D, l, d) -> (B, L, d); batch order is (shard, mb, row).
-        # The slice inherits a pipe-sharding on axis 0 that the reshape cannot
-        # keep — move it to batch-sharded explicitly first.
+        # The slice inherits a pipe-sharding on axis 0 that the reshape
+        # cannot keep — move it to batch-sharded explicitly first.
         out_last = jax.lax.with_sharding_constraint(
             out_last, NamedSharding(mesh, P(None, tcfg.data_axes, None, None)))
-        if all(s == l for s in slice_lens):
+        if p.uniform:
             o = out_last.reshape(D, M, data, mb_local, l, d_model)
             o = jnp.transpose(o, (2, 0, 3, 1, 4, 5))
             x_final = o.reshape(B, L, d_model)
@@ -401,38 +555,287 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
             x_final, NamedSharding(mesh, P(tcfg.data_axes, None, None)))
 
         for g in post:
-            x_final = _scan_full(g, params["groups"][g.name], x_final, cfg.remat)
+            x_final = _scan_full(g, params["groups"][g.name], x_final,
+                                 cfg.remat)
         return model.head_loss(params, x_final, batch["labels"])
 
-    def param_shardings(params_tree_specs):
-        """NamedSharding tree for jit in_shardings (stage params pipe-sharded,
-        everything else replicated/TP per logical spec)."""
-        # main group: pipe on layer axis (+tp); others replicated.  When the
-        # UNPADDED stack is not divisible by the pipe degree (e.g. gpt3-1b's
-        # 24 layers on pipe=16) a pipe-sharded in_sharding would be rejected
-        # at the jit boundary — keep the layer axis replicated there and let
-        # the loss re-shard at the pad boundary (the with_sharding_constraint
-        # after jnp.pad above).
-        def build(spec, in_main):
-            if in_main:
-                ps = _leaf_pspec(spec, tcfg.tp_axis, tp, tcfg.pipe_axis, cfg)
-                if n_main % K:
-                    ps = P(None, *tuple(ps)[1:])
-                return NamedSharding(mesh, ps)
-            return NamedSharding(mesh, P())
-        out = {}
-        for key, sub in params_tree_specs.items():
-            if key == "groups":
-                out["groups"] = {
-                    gname: jax.tree.map(lambda s: build(s, gname == main.name),
-                                        gspec, is_leaf=is_spec)
-                    for gname, gspec in sub.items()}
-            else:
-                out[key] = jax.tree.map(lambda s: NamedSharding(mesh, P()),
-                                        sub, is_leaf=is_spec)
-        return out
+    return loss_fn, p.param_shardings_fn()
 
-    return loss_fn, param_shardings
+
+def make_terapipe_caches_fn(model: Model, specs, mesh: Mesh,
+                            tcfg: TeraPipeConfig, seq_len: int,
+                            global_batch: int):
+    """Debug/testing: a function (params, batch) -> final per-rank cache
+    pytree of the SAME tick loop make_terapipe_loss runs (leaves stacked
+    rank-major along axis 0 across the pipe axis).  Used by the idle-tick
+    no-op audits: with ``tcfg.extra_ticks`` appended, the result must be
+    bit-identical."""
+    p = _Plan(model, specs, mesh, tcfg, seq_len, global_batch)
+    assert p.sched != "1f1b", "fwd-only executors expose the cache carry"
+    main = p.main
+    pipeline_body = _make_forward_pipeline(p)
+    lead = (p.V, p.bps) if p.V > 1 else (p.bps,)
+    cache_struct = jax.eval_shape(lambda: p.init_stage_caches(lead))
+    cache_out_specs = jax.tree.map(
+        lambda a: P(*((tcfg.pipe_axis,) + (None,) * (a.ndim - 1))),
+        cache_struct)
+    shmap = compat_shard_map(
+        lambda sp, x: pipeline_body(sp, x)[1], mesh=mesh,
+        in_specs=(p.stage_in_specs, p.x_spec),
+        out_specs=cache_out_specs, check_vma=False)
+
+    def caches_fn(params, batch):
+        x = p.prefix(params, batch)
+        return shmap(p.prep_stage_params(params["groups"][main.name]), x)
+
+    return caches_fn
+
+
+# ---------------------------------------------------------------------------
+# 1F1B executor (explicit bwd units; per-unit vjp; grads in the carry)
+# ---------------------------------------------------------------------------
+def _make_one_f_one_b_vg(p: _Plan):
+    """(params, batch) -> (loss, grads) for the 1F1B schedule.
+
+    The tick table (schedules.OneFOneB) interleaves fwd and bwd units; the
+    scan body dispatches on the per-(tick, rank) unit kind with lax.switch:
+
+    * fwd unit: run the stage, update the live cache, save (x_in, cache_in)
+      into the residual ring buffer (depth = assign.residual_spread — flat
+      in D);
+    * bwd unit: rebuild the unit's vjp from the saved inputs (stage-granular
+      recompute) and apply it to (cotangent from the reverse ring | the
+      per-slice loss seed at the last stage, accumulated cache cotangent),
+      accumulating param grads, the embedding cotangent (rank 0) and the
+      head grads (rank K-1) in the carry;
+    * idle: exact no-op.
+
+    Two ppermutes per tick: activations down (k -> k+1), cotangents down the
+    reverse ring (k -> k-1).  The per-microbatch cache cotangent is a single
+    threaded buffer — bwd units of one microbatch run slice-descending and
+    back-to-back at a rank (audited by OneFOneB.validate), so unit m+1's
+    d(cache_in) is exactly unit m's d(cache_out).
+    """
+    model, cfg, mesh, tcfg = p.model, p.cfg, p.mesh, p.tcfg
+    K, D, M, l, DM = p.K, p.D, p.M, p.l, p.DM
+    mb_local, d_model = p.mb_local, p.d_model
+    L, B = p.L, p.B
+    assign = p.assign
+    main = p.main
+    assert p.tp == 1, (
+        "schedule='1f1b' does not yet support TP inside a stage (per-slice "
+        "head loss and explicit grad psums need tp-aware reductions)")
+    assert not p.post, "1F1B needs the head/loss at the last stage; " \
+        "post-pipeline groups are not token-local"
+    assert cfg.family in ("dense", "moe"), (
+        f"schedule='1f1b' supports dense/moe families (per-slice LM loss at "
+        f"the last stage); got {cfg.family}")
+
+    tab = assign.tick_table(DM)                      # (T, K, 3), host-side
+    ticks = tab.shape[0] + tcfg.extra_ticks
+    items_np, bwd_np = tab[..., 0], tab[..., 2]
+    if tcfg.extra_ticks:                             # debug: trailing idles
+        pad = np.full((tcfg.extra_ticks, K), -1, tab.dtype)
+        items_np = np.concatenate([items_np, pad])
+        bwd_np = np.concatenate([bwd_np, pad])
+    # per-(tick, rank) switch branch: 0 = idle, 1 = fwd, 2 = bwd
+    kind_np = np.where(items_np < 0, 0, 1 + np.maximum(bwd_np, 0))
+    R = assign.residual_spread(DM)                   # residual ring depth
+    starts_host, lens_host = p.starts, list(p.slice_lens)
+    tied = cfg.tie_embeddings
+    inv_total = 1.0 / float(B * L)
+    fwd_perm = [(j, (j + 1) % K) for j in range(K)]
+    rev_perm = [(j, (j - 1) % K) for j in range(K)]
+
+    def slice_loss(x_out, head_p, labels_sl, mask):
+        """Per-slice LM loss contribution, pre-normalized by the GLOBAL
+        token count (so the accumulated sum is the mean loss and a unit
+        seed yields correctly scaled grads).  Matches models.lm math:
+        rms_norm -> head matmul in activation dtype -> f32 xent."""
+        final_ln, w_head = head_p
+        h = rms_norm(x_out, final_ln)
+        logits = (h @ w_head.astype(h.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels_sl[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mask) * inv_total
+
+    def pipeline_1f1b(stage_params, head_p, x_emb, labels):
+        k_rank = jax.lax.axis_index(tcfg.pipe_axis)
+        starts_arr = jnp.asarray(starts_host, jnp.int32)
+        lens_arr = jnp.asarray(lens_host, jnp.int32)
+        items_tab = jnp.asarray(items_np, jnp.int32)
+        kind_tab = jnp.asarray(kind_np, jnp.int32)
+
+        def tick(carry, t):
+            (x_prev, g_prev, caches, gcache, rx, rc,
+             d_stage, d_ln, d_wh, d_emb, loss_acc) = carry
+            i_raw = jax.lax.dynamic_index_in_dim(
+                jax.lax.dynamic_index_in_dim(items_tab, t, 0, keepdims=False),
+                k_rank, 0, keepdims=False)
+            kind = jax.lax.dynamic_index_in_dim(
+                jax.lax.dynamic_index_in_dim(kind_tab, t, 0, keepdims=False),
+                k_rank, 0, keepdims=False)
+            i_c = jnp.clip(i_raw, 0, DM - 1)
+            mb_idx, sl_idx = i_c // M, i_c % M
+            ctx = jnp.take(starts_arr, sl_idx)
+            len_m = jnp.take(lens_arr, sl_idx)
+            slot = i_c % R
+            x0 = jax.lax.dynamic_slice(
+                x_emb, (mb_idx * mb_local, ctx, 0), (mb_local, l, d_model))
+            labels_sl = jax.lax.dynamic_slice(
+                labels, (mb_idx * mb_local, ctx), (mb_local, l))
+            mask = (jnp.arange(l) < len_m)[None, :]
+
+            def idle_branch(_):
+                return (x_prev, g_prev, caches, gcache, rx, rc,
+                        d_stage, d_ln, d_wh, d_emb, loss_acc)
+
+            def fwd_branch(_):
+                x_in = jnp.where(k_rank == 0, x0, x_prev)
+                fresh = sl_idx == 0              # new microbatch: new prefix
+                caches_in = jax.tree.map(
+                    lambda c: jnp.where(jnp.reshape(fresh, (1,) * c.ndim),
+                                        jnp.zeros_like(c), c), caches)
+                x_out, caches_out = p.stage_apply(stage_params, x_in,
+                                                  caches_in, ctx)
+                rx2 = jax.lax.dynamic_update_slice(
+                    rx, x_in[None], (slot, 0, 0, 0))
+                rc2 = jax.tree.map(
+                    lambda buf, c: jax.lax.dynamic_update_index_in_dim(
+                        buf, c, slot, 0), rc, caches_in)
+                return (x_out, g_prev, caches_out, gcache, rx2, rc2,
+                        d_stage, d_ln, d_wh, d_emb, loss_acc)
+
+            def bwd_branch(_):
+                x_saved = jax.lax.dynamic_index_in_dim(rx, slot, 0,
+                                                       keepdims=False)
+                c_saved = jax.tree.map(
+                    lambda buf: jax.lax.dynamic_index_in_dim(
+                        buf, slot, 0, keepdims=False), rc)
+
+                def unit(sp, xi, ci, hp):
+                    xo, co = p.stage_apply(sp, xi, ci, ctx)
+                    return xo, co, slice_loss(xo, hp, labels_sl, mask)
+
+                (_, _, ls), vjp = jax.vjp(unit, stage_params, x_saved,
+                                          c_saved, head_p)
+                is_last = k_rank == K - 1
+                # last stage seeds from its own loss, not the reverse ring
+                g_out = jnp.where(is_last, jnp.zeros_like(g_prev), g_prev)
+                # first bwd of a microbatch (slice M-1): no downstream-slice
+                # cache cotangent has accumulated yet
+                first_bwd = sl_idx == M - 1
+                gcache_in = jax.tree.map(
+                    lambda c: jnp.where(jnp.reshape(first_bwd, (1,) * c.ndim),
+                                        jnp.zeros_like(c), c), gcache)
+                seed = jnp.where(is_last, jnp.float32(1), jnp.float32(0))
+                d_sp, d_x_in, d_c_in, d_hp = vjp((g_out, gcache_in, seed))
+                d_stage2 = jax.tree.map(jnp.add, d_stage, d_sp)
+                add = jnp.where(k_rank == 0, d_x_in, jnp.zeros_like(d_x_in))
+                seg = jax.lax.dynamic_slice(
+                    d_emb, (mb_idx * mb_local, ctx, 0), (mb_local, l, d_model))
+                d_emb2 = jax.lax.dynamic_update_slice(
+                    d_emb, seg + add, (mb_idx * mb_local, ctx, 0))
+                return (x_prev, d_x_in, caches, d_c_in, rx, rc, d_stage2,
+                        d_ln + d_hp[0], d_wh + d_hp[1], d_emb2,
+                        loss_acc + jnp.where(is_last, ls, jnp.float32(0)))
+
+            out = jax.lax.switch(kind, (idle_branch, fwd_branch, bwd_branch),
+                                 0)
+            (x_send, g_send, caches2, gcache2, rx2, rc2,
+             d_stage2, d_ln2, d_wh2, d_emb2, loss2) = out
+            # activations ride the forward ring, cotangents the reverse one;
+            # consumers read a ring value only on the one tick the schedule
+            # delivers it (OneFOneB.validate), so off-kind sends are inert
+            x_next = jax.lax.ppermute(x_send, tcfg.pipe_axis, fwd_perm)
+            g_next = jax.lax.ppermute(g_send, tcfg.pipe_axis, rev_perm)
+            return (x_next, g_next, caches2, gcache2, rx2, rc2,
+                    d_stage2, d_ln2, d_wh2, d_emb2, loss2), None
+
+        caches0 = p.init_stage_caches((p.bps,))
+        carry = (
+            jnp.zeros((mb_local, l, d_model), cfg.dtype),       # x_prev
+            jnp.zeros((mb_local, l, d_model), cfg.dtype),       # g_prev
+            caches0,
+            jax.tree.map(jnp.zeros_like, caches0),              # gcache
+            jnp.zeros((R, mb_local, l, d_model), cfg.dtype),    # rx
+            jax.tree.map(lambda a: jnp.zeros((R,) + a.shape, a.dtype),
+                         caches0),                              # rc
+            jax.tree.map(jnp.zeros_like, stage_params),         # d_stage
+            jnp.zeros_like(head_p[0]),                          # d_ln
+            jnp.zeros_like(head_p[1]),                          # d_wh
+            jnp.zeros_like(x_emb),                              # d_emb
+            jnp.float32(0),                                     # loss
+        )
+        if tcfg.unroll:
+            for t in range(ticks):
+                carry, _ = tick(carry, jnp.int32(t))
+        else:
+            carry, _ = jax.lax.scan(tick, carry,
+                                    jnp.arange(ticks, dtype=jnp.int32))
+        d_stage, d_ln, d_wh, d_emb, loss_acc = carry[6:]
+        axes_all = (tcfg.pipe_axis,) + tuple(tcfg.data_axes)
+        loss = jax.lax.psum(loss_acc, axes_all)
+        d_ln = jax.lax.psum(d_ln, axes_all)
+        d_wh = jax.lax.psum(d_wh, axes_all)
+        d_emb = jax.lax.psum(d_emb, tcfg.pipe_axis)    # only rank 0 nonzero
+        d_stage = jax.tree.map(
+            lambda a: jax.lax.psum(a, tuple(tcfg.data_axes)), d_stage)
+        return loss, d_emb, d_stage, d_ln, d_wh
+
+    head_in_specs = (P(None), P(None, None))
+    labels_spec = P(tcfg.data_axes, None)
+    shmap = compat_shard_map(
+        pipeline_1f1b, mesh=mesh,
+        in_specs=(p.stage_in_specs, head_in_specs, p.x_spec, labels_spec),
+        out_specs=(P(), P(tcfg.data_axes, None, None), p.stage_in_specs,
+                   P(None), P(None, None)),
+        check_vma=False)
+
+    def value_and_grad_fn(params, batch):
+        x_emb, prefix_vjp = jax.vjp(lambda prm: p.prefix(prm, batch), params)
+        labels = batch["labels"]
+        if not p.uniform:
+            labels = jnp.pad(labels, ((0, 0), (0, l)))
+        w_head = params["embed"].T if tied else params["lm_head"]
+        head_p = (params["final_ln"], w_head)
+        stage_params = p.prep_stage_params(params["groups"][main.name])
+        loss, d_emb, d_stage, d_ln, d_wh = shmap(stage_params, head_p,
+                                                 x_emb, labels)
+        (grads,) = prefix_vjp(d_emb)             # embed (+ pre groups) grads
+        grads = dict(grads)
+        grads["groups"] = dict(grads["groups"])
+        # unpad the stage grads (pad rows are identity blocks: zero grad by
+        # construction) and merge with the (zero) main-group prefix grads
+        grads["groups"][main.name] = jax.tree.map(
+            lambda a, d: a + jax.lax.slice_in_dim(d, 0, p.n_main, axis=0),
+            grads["groups"][main.name], d_stage)
+        grads["final_ln"] = grads["final_ln"] + d_ln
+        if tied:
+            grads["embed"] = grads["embed"] + d_wh.T
+        else:
+            grads["lm_head"] = grads["lm_head"] + d_wh
+        return loss, grads
+
+    return value_and_grad_fn
+
+
+def make_terapipe_value_and_grad(model: Model, specs, mesh: Mesh,
+                                 tcfg: TeraPipeConfig, seq_len: int,
+                                 global_batch: int):
+    """(params, batch) -> (loss, grads) for ANY schedule — the one entry
+    point train/dryrun drive.  Contiguous/interleaved wrap the fwd-only loss
+    in ``jax.value_and_grad`` (autodiff backward, activations live to the
+    drain); ``schedule='1f1b'`` runs the explicit-backward executor (live
+    activations bounded by the pipeline depth).  Also returns the param
+    sharding tree builder."""
+    if tcfg.schedule != "1f1b":
+        loss_fn, param_sh = make_terapipe_loss(model, specs, mesh, tcfg,
+                                               seq_len, global_batch)
+        return jax.value_and_grad(loss_fn), param_sh
+    p = _Plan(model, specs, mesh, tcfg, seq_len, global_batch)
+    return _make_one_f_one_b_vg(p), p.param_shardings_fn()
 
 
 def make_gpipe_loss(model: Model, specs, mesh: Mesh, *, n_microbatches: int,

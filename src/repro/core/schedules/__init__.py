@@ -55,12 +55,26 @@ divides the remaining fill/drain bubble by V.  (The planner accounts for
 the composition by weighting the Eq. 5 bubble term with ``(K-1)/V`` — see
 ``core/dp.optimal_slicing(virtual_stages=...)``.)
 
-Two concrete schedules are provided: :func:`contiguous` (V=1, the paper's
-TeraPipe schedule) and :func:`interleaved` (V≥2).  Future schedules (1F1B,
-Chimera-style bidirectional) extend the same IR.
-"""
-from .ir import (StageAssignment, contiguous, interleaved,  # noqa: F401
-                 interleave_stacked)
+Unit kinds and the 1F1B schedule
+--------------------------------
 
-__all__ = ["StageAssignment", "contiguous", "interleaved",
-           "interleave_stacked"]
+A unit is ``(work_item, chunk, is_bwd)``.  :func:`contiguous` and
+:func:`interleaved` are fwd-only tables (their backward pass is the autodiff
+transpose of the whole program, so every saved residual lives to the drain:
+``peak_live_items() == D·M·V``).  :class:`OneFOneB` (:func:`one_f_one_b`)
+schedules explicit bwd units 1F1B-style: fwd of item i on rank k at tick
+``2i + k``, bwd units one tick behind the reverse ``(k -> k-1)`` ring,
+microbatch-ascending but slice-descending within a microbatch (TeraPipe's
+attention-cache cotangents accumulate in reverse slice order).  The audit
+surface grows accordingly: ``validate()`` additionally proves each bwd unit
+lands one tick after its downstream bwd on the reverse ring and strictly
+after its own fwd, and ``peak_live_items()`` proves the 1F1B table keeps
+only ``min(D·M, K + M - 1)`` items' residuals live per rank — flat in the
+microbatch count D — where the fwd-only tables keep all ``D·M·V``.
+Chimera-style bidirectional pairs remain future schedules on the same IR.
+"""
+from .ir import (OneFOneB, StageAssignment, contiguous,  # noqa: F401
+                 interleaved, interleave_stacked, one_f_one_b)
+
+__all__ = ["OneFOneB", "StageAssignment", "contiguous", "interleaved",
+           "interleave_stacked", "one_f_one_b"]

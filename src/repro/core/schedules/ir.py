@@ -1,4 +1,17 @@
-"""Schedule IR: stage/chunk placement and tick geometry (see package doc)."""
+"""Schedule IR: stage/chunk placement and tick geometry (see package doc).
+
+Unit kinds (fwd + bwd)
+----------------------
+
+A *unit* is one tick of one rank's work: ``(work_item, chunk, is_bwd)``.
+Forward-only schedules (``contiguous``, ``interleaved``) emit only
+``is_bwd == 0`` units — their backward pass is the autodiff transpose of the
+whole fwd program, so every unit's saved residuals stay live until the drain
+(``peak_live_items() == n_items·V``).  Schedules with explicit backward
+units (:class:`OneFOneB`) retire a unit's residuals at its bwd tick, which
+is what bounds live memory by the pipeline depth instead of the work-item
+count (Narayanan et al. 2021 §2.2).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -17,6 +30,10 @@ class StageAssignment:
     n_ranks: int          # K
     virtual_stages: int   # V (1 = contiguous TeraPipe schedule)
     n_layers: int
+
+    #: True when the tick table contains explicit bwd units (the executor
+    #: must run per-unit vjp instead of whole-program autodiff).
+    has_backward = False
 
     def __post_init__(self):
         assert self.n_ranks >= 1 and self.virtual_stages >= 1, self
@@ -76,57 +93,240 @@ class StageAssignment:
         return self.n_units(n_items) + self.n_ranks - 1
 
     def unit_index(self, u):
-        """(work_item, chunk) of a rank's u-th unit.  Pure arithmetic in u —
-        evaluates on python ints, numpy arrays, and traced jax scalars alike
-        (the rolled executor calls it with the traced tick index, so the one
-        traced tick program serves the whole tick table)."""
+        """(work_item, chunk, is_bwd) of a rank's u-th unit.  Pure arithmetic
+        in u — evaluates on python ints, numpy arrays, and traced jax scalars
+        alike (the rolled executor calls it with the traced tick index, so
+        the one traced tick program serves the whole tick table).  Fwd-only
+        schedules always return ``is_bwd == 0``."""
         K, V = self.n_ranks, self.virtual_stages
         if V == 1:
-            return u, u * 0
+            return u, u * 0, u * 0
         KV = K * V
         g, r = u // KV, u % KV
-        return g * K + r % K, r // K
+        return g * K + r % K, r // K, u * 0
 
     def tick_table(self, n_items: int) -> np.ndarray:
-        """(n_ticks, K, 2) array; entry (t, k) = (work_item, chunk), or
-        (-1, -1) when rank k idles (fill/drain) at tick t."""
+        """(n_ticks, K, 3) array; entry (t, k) = (work_item, chunk, is_bwd),
+        or (-1, -1, -1) when rank k idles (fill/drain) at tick t."""
         T, K = self.n_ticks(n_items), self.n_ranks
         n_units = self.n_units(n_items)
-        tab = np.full((T, K, 2), -1, np.int64)
+        tab = np.full((T, K, 3), -1, np.int64)
         for k in range(K):
             u = np.arange(T) - k
             ok = (u >= 0) & (u < n_units)
-            i, v = self.unit_index(np.clip(u, 0, n_units - 1))
+            i, v, _ = self.unit_index(np.clip(u, 0, n_units - 1))
             tab[ok, k, 0] = np.broadcast_to(i, (T,))[ok]
             tab[ok, k, 1] = np.broadcast_to(v, (T,))[ok]
+            tab[ok, k, 2] = 0
         return tab
 
-    def validate(self, n_items: int) -> bool:
-        """Audit the tick table: every (work_item, stage) unit runs exactly
-        once, one unit per (tick, rank), and each unit's producer (previous
-        global stage of the same item) ran on the ring predecessor exactly
-        one tick earlier — i.e. the single per-tick ppermute ring delivers
-        every dependency just in time."""
+    # ---- audits ----------------------------------------------------------
+    def _collect(self, n_items: int):
+        """{(item, stage): (tick, rank)} for fwd and bwd units separately."""
         tab = self.tick_table(n_items)
-        when = {}
+        when_f, when_b = {}, {}
         for t in range(tab.shape[0]):
             for k in range(self.n_ranks):
-                i, v = int(tab[t, k, 0]), int(tab[t, k, 1])
+                i, v, bwd = (int(x) for x in tab[t, k])
                 if i < 0:
                     continue
                 s = self.stage_of(k, v)
-                assert (i, s) not in when, f"unit {(i, s)} scheduled twice"
-                when[(i, s)] = (t, k)
-        assert len(when) == n_items * self.n_stages, (
-            len(when), n_items, self.n_stages)
-        for (i, s), (t, k) in when.items():
+                d = when_b if bwd else when_f
+                assert (i, s) not in d, \
+                    f"{'bwd' if bwd else 'fwd'} unit {(i, s)} scheduled twice"
+                d[(i, s)] = (t, k)
+        return when_f, when_b
+
+    def validate(self, n_items: int) -> bool:
+        """Audit the tick table: every (work_item, stage) fwd unit runs
+        exactly once, one unit per (tick, rank), and each fwd unit's producer
+        (previous global stage of the same item) ran on the ring predecessor
+        exactly one tick earlier — i.e. the single per-tick ppermute ring
+        delivers every dependency just in time.  Schedules with bwd units
+        additionally audit: item i's bwd at stage s runs exactly once, one
+        tick after stage s+1's bwd on the ring *successor* (the reverse
+        ppermute ring), strictly after its own fwd at stage s (the saved
+        residuals exist), and in an order consistent with any schedule-
+        specific constraint (:meth:`_audit_backward_order`)."""
+        when_f, when_b = self._collect(n_items)
+        assert len(when_f) == n_items * self.n_stages, (
+            len(when_f), n_items, self.n_stages)
+        for (i, s), (t, k) in when_f.items():
             if s == 0:
                 continue
-            tp, kp = when[(i, s - 1)]
+            tp, kp = when_f[(i, s - 1)]
             assert tp == t - 1 and kp == (k - 1) % self.n_ranks, (
-                f"unit (item={i}, stage={s}) at (t={t}, k={k}) but producer "
-                f"ran at (t={tp}, k={kp}); ring cannot deliver it")
+                f"fwd unit (item={i}, stage={s}) at (t={t}, k={k}) but "
+                f"producer ran at (t={tp}, k={kp}); ring cannot deliver it")
+        if not self.has_backward:
+            assert not when_b
+            return True
+        assert len(when_b) == n_items * self.n_stages, (
+            len(when_b), n_items, self.n_stages)
+        for (i, s), (t, k) in when_b.items():
+            tf, _ = when_f[(i, s)]
+            assert tf < t, (
+                f"bwd unit (item={i}, stage={s}) at t={t} before its own fwd "
+                f"at t={tf}: no residuals to transpose")
+            if s == self.n_stages - 1:
+                continue           # seeds from the loss, not the ring
+            tp, kp = when_b[(i, s + 1)]
+            assert tp == t - 1 and kp == (k + 1) % self.n_ranks, (
+                f"bwd unit (item={i}, stage={s}) at (t={t}, k={k}) but its "
+                f"cotangent producer ran at (t={tp}, k={kp}); the reverse "
+                f"ring cannot deliver it")
+        self._audit_backward_order(when_b)
         return True
+
+    def _audit_backward_order(self, when_b):
+        """Hook: schedule-specific bwd ordering constraints (see OneFOneB)."""
+
+    def peak_live_items(self, n_items: int) -> int:
+        """Max, over ranks, of simultaneously-live saved residuals (units
+        whose fwd has run but whose bwd has not yet retired them).
+
+        Fwd-only schedules transpose the whole program at the drain, so every
+        unit a rank ran is still live there: peak = ``n_items·V`` (= D·M·V).
+        1F1B retires unit residuals at the unit's own bwd tick, bounding the
+        peak by the pipeline depth plus the per-microbatch bwd turnaround
+        (``min(n_items, K + M - 1)`` at V=1) — independent of the microbatch
+        count D that the DP planner scales."""
+        tab = self.tick_table(n_items)
+        T = tab.shape[0]
+        peak = 0
+        for k in range(self.n_ranks):
+            delta = np.zeros(T + 1, np.int64)
+            birth = {}
+            for t in range(T):
+                i, v, bwd = (int(x) for x in tab[t, k])
+                if i < 0:
+                    continue
+                if bwd:
+                    delta[t + 1] -= 1          # live through its bwd tick
+                    assert (i, v) in birth, (i, v, k)
+                else:
+                    delta[t] += 1
+                    birth[(i, v)] = t
+            if not self.has_backward:
+                delta[T] = 0                   # live to the drain
+            peak = max(peak, int(np.cumsum(delta)[:T].max(initial=0)))
+        return peak
+
+    def residual_spread(self, n_items: int) -> int:
+        """Ring-buffer depth for an explicit-bwd executor: the max, over
+        ranks and ticks, of ``max(live item idx) - min(live item idx) + 1``.
+        Indexing the residual store with ``item % residual_spread`` is then
+        collision-free.  ≥ :meth:`peak_live_items` (the live set need not be
+        contiguous in item index: bwd retires within-microbatch in reverse)."""
+        tab = self.tick_table(n_items)
+        spread = 0
+        for k in range(self.n_ranks):
+            live = set()
+            for t in range(tab.shape[0]):
+                i, v, bwd = (int(x) for x in tab[t, k])
+                if i < 0:
+                    continue
+                if bwd:
+                    if live:
+                        spread = max(spread, max(live) - min(live) + 1)
+                    live.discard(i)
+                else:
+                    live.add(i)
+                    spread = max(spread, max(live) - min(live) + 1)
+        return max(spread, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class OneFOneB(StageAssignment):
+    """Memory-bounded 1F1B schedule (Narayanan et al. 2021), token-level.
+
+    Explicit fwd AND bwd units in one lockstep tick table.  Work item
+    ``i = d·M + m`` (microbatch d, token slice m): fwds run in item order;
+    bwds run microbatch-ascending but slice-DESCENDING within a microbatch —
+    TeraPipe's attention cache makes slice m's kv entries inputs of every
+    later slice m' > m, so their cotangents only finish accumulating once
+    all later slices' bwds have run (the reverse of the fwd prefix chain).
+
+    Timing (K ranks, N items, M slices per microbatch; V must be 1):
+
+    * fwd of item i on rank k at tick ``2i + k``;
+    * the j-th bwd unit (item ``(j÷M)·M + (M-1 - j mod M)``) on rank k at
+      tick ``2j + 2M + 2K - 3 - k``.
+
+    Activations flow down the ``(k -> k+1)`` ring, cotangents down the
+    reverse ``(k -> k-1)`` ring; fwd and bwd ticks interleave collision-free
+    because their per-rank parities differ (``2K-1-2k`` is odd).  Total
+    ticks ``2N + 2M + 2K - 4`` — the same 2(K-1) steady-state bubble as the
+    contiguous fwd+bwd program plus a 2(M-1) per-microbatch bwd turnaround
+    (zero at M=1, the classic microbatch-1F1B).  Peak live residuals
+    ``min(N, K + M - 1)`` per rank instead of N = D·M: flat in the
+    microbatch count D.
+    """
+    n_microbatches: int = 1
+
+    has_backward = True
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.virtual_stages == 1, (
+            "1F1B requires V=1: interleaved 1F1B needs multi-tick skew "
+            "buffers that break the one-hop ppermute delivery invariant "
+            "(see ROADMAP); compose memory-bounding with interleaving via "
+            "a future schedule")
+        assert self.n_microbatches >= 1, self
+
+    def _slices_per_microbatch(self, n_items: int) -> int:
+        D = self.n_microbatches
+        assert n_items % D == 0, (
+            f"1F1B schedule: work-item count {n_items} not divisible by "
+            f"n_microbatches={D}")
+        return n_items // D
+
+    def n_units(self, n_items: int) -> int:
+        """Per-rank units: one fwd AND one bwd per work item."""
+        self._slices_per_microbatch(n_items)
+        return 2 * n_items
+
+    def n_ticks(self, n_items: int) -> int:
+        M = self._slices_per_microbatch(n_items)
+        return 2 * n_items + 2 * M + 2 * self.n_ranks - 4
+
+    def unit_index(self, u):
+        raise NotImplementedError(
+            "1F1B unit timing is rank-dependent (fwd/bwd interleave by rank "
+            "parity); the executor consumes tick_table() as a gather table "
+            "instead of closed-form unit arithmetic")
+
+    def tick_table(self, n_items: int) -> np.ndarray:
+        N, K = n_items, self.n_ranks
+        M = self._slices_per_microbatch(N)
+        T = self.n_ticks(N)
+        tab = np.full((T, K, 3), -1, np.int64)
+        i = np.arange(N)
+        bwd_items = (i // M) * M + (M - 1 - i % M)       # item of j-th bwd
+        for k in range(K):
+            t_f = 2 * i + k
+            tab[t_f, k, 0] = i
+            tab[t_f, k, 1] = 0
+            tab[t_f, k, 2] = 0
+            t_b = 2 * i + 2 * M + 2 * K - 3 - k
+            assert not np.intersect1d(t_f, t_b).size      # parity-disjoint
+            tab[t_b, k, 0] = bwd_items
+            tab[t_b, k, 1] = 0
+            tab[t_b, k, 2] = 1
+        return tab
+
+    def _audit_backward_order(self, when_b):
+        """Within each microbatch, at every stage, bwd ticks must DESCEND in
+        slice index (the cache-cotangent accumulation order)."""
+        items = sorted({i for i, _ in when_b})
+        M = self._slices_per_microbatch(len(items))
+        for s in {s for _, s in when_b}:
+            for d in range(len(items) // M):
+                ticks = [when_b[(d * M + m, s)][0] for m in range(M)]
+                assert ticks == sorted(ticks, reverse=True), (
+                    f"stage {s} microbatch {d}: bwd ticks {ticks} not "
+                    f"slice-descending; cache cotangents incomplete")
 
 
 def contiguous(n_ranks: int, n_layers: int) -> StageAssignment:
@@ -140,6 +340,12 @@ def interleaved(n_ranks: int, virtual_stages: int,
     rank, ring traversed V times per work item."""
     assert virtual_stages >= 2, virtual_stages
     return StageAssignment(n_ranks, virtual_stages, n_layers)
+
+
+def one_f_one_b(n_ranks: int, n_layers: int,
+                n_microbatches: int = 1) -> OneFOneB:
+    """Memory-bounded 1F1B schedule (explicit bwd units; V=1)."""
+    return OneFOneB(n_ranks, 1, n_layers, n_microbatches)
 
 
 def interleave_stacked(a, assign: StageAssignment):

@@ -12,6 +12,15 @@ in three execution disciplines:
   in ``core/schedules``): each work item traverses the ring V times in
   chunk-sized (1/V) units, so fill/drain ticks cost 1/V of a full stage and
   the bubble shrinks by ~V.  Requires the work-item count divisible by K.
+* ``1f1b`` — lockstep with explicit bwd units (``schedules.OneFOneB``):
+  fwd and bwd ticks interleave 1F1B-style, bounding live activations by the
+  pipeline depth instead of the work-item count.  Tick COUNT matches the
+  contiguous fwd+bwd program up to a 2(M-1) per-microbatch bwd turnaround,
+  but lockstep tick DURATION is the max over ranks — and 1F1B mixes fwd and
+  bwd units within every steady-state tick (rank parity), so with
+  bwd ≈ 2·fwd every such tick costs a bwd: the memory bound is paid with a
+  latency premium the simulator reports honestly.  Implies fwd+bwd
+  (``include_backward=True`` required); requires uniform splits.
 
 Supports per-stage slowdown factors (straggler studies / DP-based
 re-planning) and fwd+bwd symmetric simulation.
@@ -24,7 +33,10 @@ import numpy as np
 
 from .cost_model import CostModel
 from .schedule import SlicingScheme
-from .schedules import StageAssignment
+from .schedules import OneFOneB, StageAssignment
+
+#: bwd ≈ 2·fwd (two matmuls per fwd matmul), the convention _work_items uses
+BWD_COST_FACTOR = 2.0
 
 
 def _work_items(scheme: SlicingScheme, t_of, include_backward: bool):
@@ -83,15 +95,34 @@ def _lockstep_total(items, K: int, V: int, slow) -> float:
     n_units = assign.n_units(items.size)        # asserts divisibility for V>1
     u = np.arange(n_units + K - 1)[:, None] - np.arange(K)[None, :]
     valid = (u >= 0) & (u < n_units)
-    i, _ = assign.unit_index(np.clip(u, 0, n_units - 1))
+    i, _, _ = assign.unit_index(np.clip(u, 0, n_units - 1))
     dur = np.where(valid, items[i] * (np.asarray(slow)[None, :] / V), 0.0)
     return float(dur.max(axis=1).sum())
 
 
+def _one_f_one_b_total(fwd_items, K: int, n_microbatches: int, slow) -> float:
+    """Lockstep tick sum over the 1F1B fwd+bwd table (schedules.OneFOneB).
+
+    ``fwd_items`` are the FORWARD durations in work-item order; bwd units
+    cost ``BWD_COST_FACTOR`` times their item's fwd.  Tick duration is the
+    max over active ranks — the fwd/bwd rank-parity mix is priced in."""
+    items = np.asarray(fwd_items, np.float64)
+    assign = OneFOneB(n_ranks=K, virtual_stages=1, n_layers=1,
+                      n_microbatches=n_microbatches)
+    tab = assign.tick_table(items.size)
+    i, bwd = tab[..., 0], tab[..., 2]
+    kind = np.where(bwd == 1, BWD_COST_FACTOR, 1.0)
+    dur = np.where(i >= 0,
+                   items[np.clip(i, 0, items.size - 1)] * kind
+                   * np.asarray(slow)[None, :], 0.0)
+    return float(dur.max(axis=1).sum())
+
+
 def _discipline_total(items, K: int, discipline: str, virtual_stages: int,
-                      slow) -> float:
+                      slow, n_microbatches: int = 1) -> float:
     """Dispatch flattened work-item durations to one discipline engine —
-    the single place a new discipline (e.g. 1F1B) gets wired in."""
+    the single place a new discipline gets wired in.  For ``1f1b``,
+    ``items`` must be the fwd-only durations (the bwd table is explicit)."""
     if discipline == "async":
         assert virtual_stages == 1, \
             "async discipline models the contiguous (V=1) schedule only"
@@ -102,7 +133,20 @@ def _discipline_total(items, K: int, discipline: str, virtual_stages: int,
         return _lockstep_total(items, K, 1, slow)
     if discipline == "interleaved":
         return _lockstep_total(items, K, virtual_stages, slow)
+    if discipline == "1f1b":
+        assert virtual_stages == 1, \
+            "1F1B is a V=1 schedule (see schedules.OneFOneB)"
+        return _one_f_one_b_total(items, K, n_microbatches, slow)
     raise ValueError(discipline)
+
+
+def _one_f_one_b_groups(scheme: SlicingScheme) -> int:
+    """Microbatch count D for the 1F1B table; requires uniform slice counts
+    (the per-microbatch bwd turnaround is a single M in the timing)."""
+    counts = [len(ls) for _, ls in scheme.splits]
+    assert len(set(counts)) == 1, (
+        f"1f1b discipline needs a uniform slice count per split, got {counts}")
+    return len(counts)
 
 
 def simulate(scheme: SlicingScheme, K: int, t_of, *,
@@ -110,9 +154,17 @@ def simulate(scheme: SlicingScheme, K: int, t_of, *,
              stage_slowdown: Optional[Sequence[float]] = None,
              virtual_stages: int = 1) -> float:
     """t_of(b, l, ctx) -> seconds for one stage.  Returns total latency."""
-    items = _work_items(scheme, t_of, include_backward)
     slow = np.ones(K) if stage_slowdown is None else np.asarray(stage_slowdown)
     assert len(slow) == K
+    if discipline == "1f1b":
+        # the 1F1B table IS the fwd+bwd program; bwd costs are applied per
+        # unit inside the engine, not by appending reversed items
+        assert include_backward, \
+            "1f1b is inherently fwd+bwd; pass include_backward=True"
+        items = _work_items(scheme, t_of, include_backward=False)
+        return _discipline_total(items, K, discipline, virtual_stages, slow,
+                                 n_microbatches=_one_f_one_b_groups(scheme))
+    items = _work_items(scheme, t_of, include_backward)
     return _discipline_total(items, K, discipline, virtual_stages, slow)
 
 
@@ -129,14 +181,22 @@ def bubble_fraction(scheme: SlicingScheme, K: int, t_of, *,
     # flatten once and feed the discipline engine directly — t_of can be a
     # measured cost model; going through simulate() would evaluate it a
     # second time per work item
-    items = _work_items(scheme, t_of, include_backward)
     slow = np.ones(K) if stage_slowdown is None else np.asarray(stage_slowdown)
+    if discipline == "1f1b":
+        assert include_backward, \
+            "1f1b is inherently fwd+bwd; pass include_backward=True"
+        items = _work_items(scheme, t_of, include_backward=False)
+        T = _discipline_total(items, K, discipline, virtual_stages, slow,
+                              n_microbatches=_one_f_one_b_groups(scheme))
+        work = float(np.sum(items)) * (1.0 + BWD_COST_FACTOR) * float(np.max(slow))
+        return (T - work) / T
+    items = _work_items(scheme, t_of, include_backward)
     T = _discipline_total(items, K, discipline, virtual_stages, slow)
     work = float(np.sum(items)) * float(np.max(slow))
     return (T - work) / T
 
 
-def eq5_latency(slices: List[int], K: int, t_fwd, b: int = 1) -> float:
+def eq5_latency(slices: List[int], K: int, t_fwd) -> float:
     """Closed form T = Σ t_i + (K-1)·max t_i (paper Eq. 5), single split."""
     ctx, ts = 0, []
     for l in slices:

@@ -38,14 +38,18 @@ class BinTokenSource:
 
     def __post_init__(self):
         self._data = np.memmap(self.path, dtype=self.dtype, mode="r")
+        assert len(self._data) > 0, f"empty token file: {self.path}"
 
     def tokens_at(self, step: int, shard: int, shape) -> np.ndarray:
         b, s = shape
         n = b * s
         total = len(self._data)
-        # deterministic strided window per (step, shard); wraps around
-        start = (step * 2_147_483_647 + shard * 97_003) % max(total - n, 1)
-        return np.asarray(self._data[start:start + n], dtype=np.int32).reshape(b, s)
+        # deterministic strided window per (step, shard); the modular index
+        # wraps the read around the end of the file (and cycles a file
+        # shorter than one batch), so any window is valid for any file size
+        start = (step * 2_147_483_647 + shard * 97_003) % total
+        idx = (start + np.arange(n)) % total
+        return np.asarray(self._data[idx], dtype=np.int32).reshape(b, s)
 
 
 @dataclasses.dataclass

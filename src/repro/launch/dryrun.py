@@ -40,12 +40,15 @@ from repro.distributed.sharding import batch_shardings
 
 
 def cell_tag(arch: str, shape_name: str, multi_pod: bool, mode: str,
-             virtual_stages: int = 1, variant: str = "") -> str:
+             virtual_stages: int = 1, variant: str = "",
+             schedule: str = "contiguous") -> str:
     """Result-file tag for one cell — the single source of truth, used both
     when writing results (run_cell) and when probing the --skip-done cache."""
     tag = f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}_{mode}"
     if virtual_stages > 1:
         tag += f"_v{virtual_stages}"
+    if schedule not in ("contiguous", "interleaved"):
+        tag += f"_{schedule}"       # interleaved is already the _v tag
     if variant:
         tag += f"_{variant}"
     return tag
@@ -64,7 +67,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              param_dtype=None, remat_policy: str = "full",
              layout: str = "tp", fsdp: bool = True, capacity=None,
              seqpar: bool = False, terapipe_dp: bool = False,
-             virtual_stages: int = 1, variant: str = "") -> dict:
+             virtual_stages: int = 1, variant: str = "",
+             schedule: str = "contiguous") -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
     if remat_policy != "full":
@@ -73,12 +77,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         cfg = cfg.replace(capacity_factor=capacity)
     reason = skip_reason(arch, shape_name)
     if mode != "terapipe":
-        virtual_stages = 1      # only the terapipe lowering consumes it —
-                                # don't stamp v-tags onto identical cells
-    tag = cell_tag(arch, shape_name, multi_pod, mode, virtual_stages, variant)
+        virtual_stages = 1      # only the terapipe lowering consumes these —
+        schedule = "contiguous"  # don't stamp tags onto identical cells
+    tag = cell_tag(arch, shape_name, multi_pod, mode, virtual_stages, variant,
+                   schedule)
     rec = {"arch": arch, "shape": shape_name, "mode": mode,
            "multi_pod": multi_pod, "n_chips": 512 if multi_pod else 256,
-           "virtual_stages": virtual_stages}
+           "virtual_stages": virtual_stages, "schedule": schedule}
     if reason:
         rec["skipped"] = reason
         return _dump(rec, out_dir, tag)
@@ -89,7 +94,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         if mode == "terapipe":
             lowered, n_chips = _lower_terapipe(
                 model, shape, multi_pod, terapipe_slices, terapipe_pipe,
-                dp_plan=terapipe_dp, virtual_stages=virtual_stages)
+                dp_plan=terapipe_dp, virtual_stages=virtual_stages,
+                schedule=schedule)
         else:
             lowered, n_chips = _lower_gspmd(model, cfg, shape, multi_pod,
                                             param_dtype=param_dtype,
@@ -197,8 +203,9 @@ def _lower_gspmd(model, cfg, shape, multi_pod, param_dtype=None,
 
 def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
                     dp_plan: bool = False, unroll: bool = False,
-                    virtual_stages: int = 1):
-    from repro.core.pipeline import TeraPipeConfig, make_terapipe_loss
+                    virtual_stages: int = 1, schedule: str = "contiguous"):
+    from repro.core.pipeline import (TeraPipeConfig,
+                                     make_terapipe_value_and_grad)
     from repro.launch.steps import abstract_init, abstract_opt_state
     from repro.optim.adamw import apply_updates
 
@@ -210,20 +217,26 @@ def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
     specs_in = input_specs(cfg, shape)
     b_sh = batch_shardings(specs_in, mesh, daxes)
     tp = mesh.shape.get("tp", 1)
+    if virtual_stages > 1 and schedule == "contiguous":
+        schedule = "interleaved"     # back-compat: V>1 implies interleaving
+    if schedule == "1f1b" and tp > 1:
+        raise NotImplementedError(
+            f"--schedule 1f1b needs a TP-free pipe mesh; pipe={n_pipe} "
+            f"leaves tp={tp} (pick --terapipe-pipe 16)")
 
     slice_lens = None
     if dp_plan:
         from repro.core.cost_model import AnalyticCostModel, TPU_V5E
-        from repro.core.dp import optimal_slicing, pad_slice_count
+        from repro.core.dp import ensure_executable, optimal_slicing
         cm = AnalyticCostModel(cfg, TPU_V5E,
                                layers_per_stage=max(1, model.n_blocks // n_pipe))
         plan = optimal_slicing(cm, shape.seq_len, n_pipe, granularity=128,
                                virtual_stages=virtual_stages)
-        slices = plan.slices
-        if virtual_stages > 1 and len(slices) % n_pipe:
-            # restore the interleaved executability constraint (M % K == 0)
-            # by splitting the plan's largest slices (never raises t_max)
-            slices = pad_slice_count(slices, n_pipe, granularity=128)
+        # schedule-aware executability post-pass (splitting the largest
+        # slices never raises t_max)
+        slices = ensure_executable(plan.slices, schedule=schedule,
+                                   n_ranks=n_pipe, n_microbatches=1,
+                                   granularity=128)
         slice_lens = tuple(slices)
         print(f"[dp-plan] {len(slice_lens)} slices: {list(slice_lens)}",
               flush=True)
@@ -250,10 +263,11 @@ def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
                           pipe_axis="pipe",
                           tp_axis="tp" if tp > 1 else None,
                           data_axes=daxes, unroll=unroll,
+                          schedule=schedule,
                           virtual_stages=virtual_stages)
     structs, specs = abstract_init(model)
     with use_mesh(mesh):
-        loss_fn, param_sh_fn = make_terapipe_loss(
+        vg_fn, param_sh_fn = make_terapipe_value_and_grad(
             model, specs, mesh, tcfg, shape.seq_len, shape.global_batch)
         p_sh = param_sh_fn(specs)
         opt = adamw(cosine_schedule(3e-4, 100, 10_000))
@@ -261,7 +275,7 @@ def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
         o_sh = type(o_structs)(None, p_sh, p_sh)
 
         def train_step(params, opt_state, batch):
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            loss, grads = vg_fn(params, batch)
             updates, opt_state = opt.update(grads, opt_state, params)
             return apply_updates(params, updates), opt_state, loss
 
@@ -345,6 +359,10 @@ def main():
     ap.add_argument("--skip-done", action="store_true")
     ap.add_argument("--terapipe-slices", type=int, default=4)
     ap.add_argument("--terapipe-pipe", type=int, default=16)
+    ap.add_argument("--schedule", default="contiguous",
+                    choices=["contiguous", "interleaved", "1f1b"],
+                    help="pipeline schedule (core/schedules; terapipe mode "
+                    "only): 1f1b = memory-bounded explicit-backward table")
     ap.add_argument("--virtual-stages", type=int, default=1,
                     help="V layer chunks per pipeline rank (interleaved "
                     "schedule; terapipe mode only)")
@@ -362,6 +380,12 @@ def main():
     ap.add_argument("--compile", action="store_true",
                     help="with --compare-executors: also compile both")
     args = ap.parse_args()
+    # validate up front: an invalid combination must not run (and, worse,
+    # write its failure record under another schedule's cell tag)
+    if args.schedule == "interleaved" and args.virtual_stages < 2:
+        ap.error("--schedule interleaved needs --virtual-stages >= 2")
+    if args.schedule == "1f1b" and args.virtual_stages != 1:
+        ap.error("--schedule 1f1b is a V=1 schedule (see core/schedules)")
 
     if args.compare_executors:
         rec = compare_executors(
@@ -384,7 +408,9 @@ def main():
     for a, s, mp in cells:
         tag = cell_tag(a, s, mp, args.mode,
                        args.virtual_stages if args.mode == "terapipe" else 1,
-                       args.variant)
+                       args.variant,
+                       args.schedule if args.mode == "terapipe"
+                       else "contiguous")
         if args.skip_done and (Path(args.out_dir) / f"{tag}.json").exists():
             prev = json.loads((Path(args.out_dir) / f"{tag}.json").read_text())
             if prev.get("ok") or prev.get("skipped"):
@@ -399,7 +425,7 @@ def main():
                        fsdp=not args.no_fsdp, capacity=args.capacity,
                        seqpar=args.seqpar, terapipe_dp=args.terapipe_dp,
                        virtual_stages=args.virtual_stages,
-                       variant=args.variant)
+                       variant=args.variant, schedule=args.schedule)
         if not (rec.get("ok") or rec.get("skipped")):
             n_fail += 1
     sys.exit(1 if n_fail else 0)

@@ -7,8 +7,21 @@ Runs on anything from 1 CPU (smoke configs) to the production mesh:
 
 Features (DESIGN.md §6): checkpoint/restart (atomic, resumable, exact data
 position), supervisor loop that restores the last checkpoint on step failure,
-optional fault injection, TeraPipe / GPipe / GSPMD execution modes, straggler
+optional fault injection, TeraPipe / GPipe / GSPMD execution modes with
+selectable pipeline schedule (contiguous / interleaved / 1f1b), straggler
 re-planning hook, throughput logging.
+
+Fault tolerance vs buffer donation
+----------------------------------
+
+The train step donates ``params``/``opt_state`` (halves peak optimizer
+memory), which DELETES the input buffers whenever the step has dispatched —
+including a step that then faults.  The supervisor therefore only donates
+when a checkpoint directory is configured (restore is the recovery path; the
+restore target is rebuilt from ShapeDtypeStructs captured at init, never
+from possibly-deleted live arrays).  Without ``--checkpoint-dir`` the
+supervisor keeps donation OFF so the pre-step ``params``/``opt_state``
+references stay alive as the rescue copy for the retry path.
 """
 from __future__ import annotations
 
@@ -30,27 +43,34 @@ from repro.optim.adamw import adamw, apply_updates, cosine_schedule
 from repro.launch.steps import make_train_step
 
 
-def build_loss(model, specs, mesh, args):
+def build_value_and_grad(model, specs, mesh, args):
+    """(params, batch) -> (loss, grads) for the selected execution mode."""
     if args.mode == "gspmd" or mesh is None:
-        return model.loss
-    from repro.core.pipeline import TeraPipeConfig, make_terapipe_loss
+        return jax.value_and_grad(model.loss)
+    from repro.core.pipeline import (TeraPipeConfig,
+                                     make_terapipe_value_and_grad)
+    schedule = args.schedule
+    if args.virtual_stages > 1 and schedule == "contiguous":
+        schedule = "interleaved"   # V>1 implies interleaving (back-compat);
+        # promote BEFORE the plan post-pass so it applies the interleaved
+        # divisibility constraint
     slice_lens = None
     if args.mode == "terapipe" and args.dp_plan:
         # Algorithm 1 end-to-end: plan the slicing with the DP, execute it
         from repro.core.cost_model import AnalyticCostModel, TPU_V5E
-        from repro.core.dp import optimal_slicing, pad_slice_count
+        from repro.core.dp import ensure_executable, optimal_slicing
         K = mesh.shape["pipe"]
         cm = AnalyticCostModel(model.cfg, TPU_V5E,
                                layers_per_stage=max(1, model.n_blocks // K))
         g = max(1, args.seq // 16)
         plan = optimal_slicing(cm, args.seq, K, granularity=g,
                                virtual_stages=args.virtual_stages)
-        slices = plan.slices
-        if args.virtual_stages > 1 and \
-                (args.microbatches * len(slices)) % K:
-            # interleaved executability (D*M % K == 0): split the largest
-            # planned slices — never raises t_max, keeps the plan valid
-            slices = pad_slice_count(slices, K, granularity=g)
+        # schedule-aware executability post-pass (e.g. interleaved needs
+        # D*M % K == 0; splitting the largest slices never raises t_max)
+        slices = ensure_executable(plan.slices, schedule=schedule,
+                                   n_ranks=K,
+                                   n_microbatches=args.microbatches,
+                                   granularity=g)
         slice_lens = tuple(slices)
         print(f"[dp-plan] slices {list(slice_lens)} "
               f"(predicted {plan.latency*1e3:.1f} ms/iter)")
@@ -60,10 +80,11 @@ def build_loss(model, specs, mesh, args):
         n_microbatches=args.microbatches,
         pipe_axis="pipe", tp_axis=None, data_axes=("data",),
         unroll=args.unroll,
+        schedule=schedule,
         virtual_stages=args.virtual_stages)
-    loss_fn, _ = make_terapipe_loss(model, specs, mesh, tcfg, args.seq,
-                                    args.batch)
-    return loss_fn
+    vg_fn, _ = make_terapipe_value_and_grad(model, specs, mesh, tcfg,
+                                            args.seq, args.batch)
+    return vg_fn
 
 
 def main(argv=None):
@@ -82,11 +103,16 @@ def main(argv=None):
     ap.add_argument("--dp-plan", action="store_true",
                     help="plan slice lengths with the paper's DP (Alg. 1)")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--schedule", default="contiguous",
+                    choices=["contiguous", "interleaved", "1f1b"],
+                    help="pipeline schedule (core/schedules): contiguous = "
+                    "the paper's TeraPipe table; interleaved = Megatron "
+                    "virtual stages (set --virtual-stages); 1f1b = memory-"
+                    "bounded explicit-backward table")
     ap.add_argument("--virtual-stages", type=int, default=1,
                     help="V layer chunks per pipeline rank (interleaved "
-                    "virtual-stage schedule; V=1 = contiguous TeraPipe). "
-                    "Needs microbatches*token-slices divisible by the pipe "
-                    "degree")
+                    "schedule; V>1 implies --schedule interleaved). Needs "
+                    "microbatches*token-slices divisible by the pipe degree")
     ap.add_argument("--unroll", action="store_true",
                     help="unrolled tick loop (debug/differential testing; "
                     "trace time grows with D*M)")
@@ -94,10 +120,16 @@ def main(argv=None):
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--simulate-failure-at", type=int, default=-1,
-                    help="raise a fault at this step once (FT test)")
+                    help="raise a fault at this step once, AFTER the step "
+                    "has dispatched — donated buffers are really gone, as "
+                    "in a mid-step hardware fault (FT test)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.schedule == "interleaved" and args.virtual_stages < 2:
+        ap.error("--schedule interleaved needs --virtual-stages >= 2")
+    if args.schedule == "1f1b" and args.virtual_stages != 1:
+        ap.error("--schedule 1f1b is a V=1 schedule (see core/schedules)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.family == "moe":
@@ -113,36 +145,43 @@ def main(argv=None):
         n = len(jax.devices())
         pipe = min(4, n)
         mesh = make_mesh((n // pipe, pipe), ("data", "pipe"))
-    loss_fn = build_loss(model, specs, mesh, args)
+    vg_fn = build_value_and_grad(model, specs, mesh, args)
 
     def train_step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss, grads = vg_fn(params, batch)
         updates, opt_state = opt.update(grads, opt_state, params)
         return apply_updates(params, updates), opt_state, loss
 
     ctx = use_mesh(mesh) if mesh is not None else None
     if ctx is not None:
         ctx.__enter__()
-    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+    ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
+    # donation deletes the inputs of every dispatched step — only safe when a
+    # checkpoint can restore them; without one, the live references ARE the
+    # fault-recovery state (see module docstring)
+    donate = (0, 1) if ckpt else ()
+    step_fn = jax.jit(train_step, donate_argnums=donate)
+    # restore target: structure template captured BEFORE any donation can
+    # delete the live arrays (manager.restore only reads the treedef)
+    state_template = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        {"params": params, "opt": opt_state})
+    state_template["step"] = 0
 
     extra = None
     if cfg.family == "vlm":
         extra = {"patch_embeds": ((cfg.n_patches, cfg.d_model), np.float32)}
     if cfg.family == "encdec":
         extra = {"frames": ((args.seq, cfg.d_model), np.float32)}
+    # vlm: the image patches prefix the token stream, so only seq - patches
+    # positions carry text tokens
+    text_len = args.seq - cfg.n_patches if cfg.family == "vlm" else args.seq
     data = DataPipeline(SyntheticSource(cfg.vocab_size, args.seed),
-                        args.batch, args.seq, extra_specs=extra)
-    if cfg.family == "vlm":
-        # text positions = seq - patches
-        data = DataPipeline(SyntheticSource(cfg.vocab_size, args.seed),
-                            args.batch, args.seq - cfg.n_patches,
-                            extra_specs=extra)
+                        args.batch, text_len, extra_specs=extra)
 
-    ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
     start_step = 0
     if ckpt and args.resume and ckpt.latest_step() is not None:
-        state = ckpt.restore(target={"params": params, "opt": opt_state,
-                                     "step": 0})
+        state = ckpt.restore(target=state_template)
         params, opt_state, start_step = (state["params"], state["opt"],
                                          int(state["step"]))
         print(f"[resume] restored step {start_step}")
@@ -153,23 +192,35 @@ def main(argv=None):
     while step < args.steps:
         try:
             batch = data.batch_at(step)
+            out = step_fn(params, opt_state, batch)
             if args.simulate_failure_at == step and not failed_once:
+                # inject AFTER dispatch: with donation on, params/opt_state
+                # are now deleted — exactly the state a real mid-step fault
+                # leaves behind
                 failed_once = True
                 raise RuntimeError("injected fault (simulate-failure-at)")
-            params, opt_state, loss = step_fn(params, opt_state, batch)
+            params, opt_state, loss = out
             tok_count += batch["tokens"].size
             step += 1
         except Exception as e:  # supervisor: restore-and-continue
             print(f"[fault] step {step}: {e}", file=sys.stderr)
             if ckpt and ckpt.latest_step() is not None:
-                state = ckpt.restore(target={"params": params,
-                                             "opt": opt_state, "step": 0})
+                state = ckpt.restore(target=state_template)
                 params, opt_state, step = (state["params"], state["opt"],
                                            int(state["step"]))
                 print(f"[fault] restored checkpoint at step {step}")
                 continue
+            if ckpt:
+                # donation was on but nothing has been saved yet: the inputs
+                # of the faulted step are deleted and unrecoverable
+                print("[fault] no checkpoint saved yet and donation has "
+                      "deleted the step inputs; cannot retry", file=sys.stderr)
+                raise
             if failed_once and args.simulate_failure_at >= 0:
-                print("[fault] no checkpoint yet; retrying step")
+                # no checkpointing configured: donation is off, so the
+                # pre-step params/opt_state references are intact — retry
+                print("[fault] no checkpoint dir; retrying step with rescue "
+                      "references")
                 continue
             raise
 

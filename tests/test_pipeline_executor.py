@@ -1,5 +1,6 @@
 """Rolled (lax.scan) vs unrolled tick-loop executor (ISSUE 1 tentpole),
-plus the interleaved virtual-stage schedule (ISSUE 2, core/schedules).
+the interleaved virtual-stage schedule (ISSUE 2, core/schedules), and the
+1F1B explicit-backward executor + idle-tick cache gating (ISSUE 3).
 
 Properties:
   * differential equivalence — loss AND grads of the rolled executor match
@@ -120,6 +121,116 @@ def test_interleaved_matches_contiguous_and_reference():
         print("INTERLEAVE-EQUIV-OK")
     """)
     assert "INTERLEAVE-EQUIV-OK" in out
+
+
+_ONE_F_ONE_B_EQUIV = """
+    import jax, jax.numpy as jnp
+    from repro.compat import make_mesh, use_mesh
+    from repro.models.common import ModelConfig
+    from repro.models import build_model
+    from repro.core.pipeline import (make_terapipe_loss,
+                                     make_terapipe_value_and_grad,
+                                     TeraPipeConfig)
+    K = {K}
+    cfg = ModelConfig(name="t", family="dense", n_layers={n_layers},
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=256, dtype=jnp.float32, remat=False)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    B, S = 4, 32
+    rng = jax.random.PRNGKey(7)
+    batch = {{"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+              "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}}
+    mesh = make_mesh((1, K), ("data", "pipe"))
+    rel = lambda a, b: float(jnp.max(jnp.abs(a - b)) /
+                             (1e-6 + jnp.max(jnp.abs(b))))
+    lref = float(jax.jit(model.loss)(params, batch))
+    gref = jax.grad(model.loss)(params, batch)
+    for desc, kw in [("uniform", dict(n_token_slices=4)),
+                     ("nonuniform", dict(slice_lens=(12, 8, 8, 4)))]:
+        with use_mesh(mesh):
+            tc = TeraPipeConfig(n_microbatches=2, data_axes=("data",),
+                                cache_dtype=jnp.float32, **kw)
+            lf, _ = make_terapipe_loss(model, specs, mesh, tc, S, B)
+            lc, gc = jax.jit(jax.value_and_grad(lf))(params, batch)
+            t1 = TeraPipeConfig(n_microbatches=2, data_axes=("data",),
+                                cache_dtype=jnp.float32, schedule="1f1b",
+                                **kw)
+            vg, _ = make_terapipe_value_and_grad(model, specs, mesh, t1, S, B)
+            l1, g1 = jax.jit(vg)(params, batch)
+        # 1f1b vs the contiguous (autodiff-backward) executor
+        assert abs(float(l1) - float(lc)) < 1e-5 * max(
+            1.0, abs(float(lc))), (desc, float(l1), float(lc))
+        gerr = max(jax.tree.leaves(jax.tree.map(rel, g1, gc)))
+        assert gerr < 1e-4, (desc, gerr)
+        # and vs the non-pipelined reference
+        assert abs(float(l1) - lref) < 2e-5, (desc, float(l1), lref)
+        gerr_ref = max(jax.tree.leaves(jax.tree.map(rel, g1, gref)))
+        assert gerr_ref < 2e-3, (desc, gerr_ref)
+        print(desc, "OK", float(l1), float(lc), gerr, gerr_ref)
+    print("1F1B-EQUIV-OK")
+"""
+
+
+@pytest.mark.parametrize("K,n_layers", [(2, 2), (4, 4)])
+def test_one_f_one_b_matches_contiguous_and_reference(K, n_layers):
+    """The 1F1B executor's explicit per-unit-vjp backward (ISSUE 3
+    tentpole): loss and every grad leaf match both the contiguous
+    autodiff-backward executor and the non-pipelined reference, on K=2 and
+    K=4, uniform AND non-uniform (DP-style) slices, D=2 microbatches."""
+    out = _run_subprocess(devices=K,
+                          code=_ONE_F_ONE_B_EQUIV.format(K=K,
+                                                         n_layers=n_layers))
+    assert "1F1B-EQUIV-OK" in out
+
+
+def test_idle_ticks_leave_caches_bit_identical():
+    """Satellite bugfix audit: cache mutation is gated on ``valid``, so
+    fill/drain (and appended extra) idle ticks are exact cache no-ops.
+    Before the fix the drain ticks of a D=2, M=1 run zeroed every rank's
+    cache except the last (clamped idle units aliased a fresh unit), so the
+    final caches (a) no longer matched the reference prefill K/V of the
+    last microbatch and (b) changed when pure-idle ticks were appended."""
+    out = _run_subprocess(devices=2, code="""
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.compat import make_mesh, use_mesh
+        from repro.models.common import ModelConfig
+        from repro.models import build_model
+        from repro.core.pipeline import make_terapipe_caches_fn, TeraPipeConfig
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                          dtype=jnp.float32, remat=False)
+        model = build_model(cfg)
+        params, specs = model.init(jax.random.PRNGKey(0))
+        B, S, D = 4, 16, 2
+        rng = jax.random.PRNGKey(5)
+        batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+        mesh = make_mesh((1, 2), ("data", "pipe"))
+        caches = {}
+        for extra in (0, 3):
+            tcfg = TeraPipeConfig(n_token_slices=1, n_microbatches=D,
+                                  data_axes=("data",),
+                                  cache_dtype=jnp.float32, extra_ticks=extra)
+            with use_mesh(mesh):
+                cf = make_terapipe_caches_fn(model, specs, mesh, tcfg, S, B)
+                caches[extra] = jax.tree.map(np.asarray,
+                                             jax.jit(cf)(params, batch))
+        # (a) appended idle ticks: bit-identical caches
+        for a, b in zip(jax.tree.leaves(caches[0]), jax.tree.leaves(caches[3])):
+            np.testing.assert_array_equal(a, b)
+        # (b) the final cache is the K/V of the LAST microbatch (drain idles
+        # must not have zeroed it) == reference prefill on those rows
+        last = {k: v[B // D:] for k, v in batch.items()}
+        _, ref = model.prefill(params, last, S)
+        for got, want in zip(jax.tree.leaves(caches[0]),
+                             jax.tree.leaves(ref)):
+            assert np.max(np.abs(want)) > 0          # the audit has teeth
+            np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+        print("IDLE-TICK-CACHES-OK")
+    """)
+    assert "IDLE-TICK-CACHES-OK" in out
 
 
 def _count_eqns(jaxpr) -> int:

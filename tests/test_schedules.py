@@ -1,11 +1,13 @@
-"""Schedule IR (core/schedules): placement, tick geometry, bubble math."""
+"""Schedule IR (core/schedules): placement, tick geometry, bubble math,
+fwd+bwd unit-kind tables (1F1B) and the live-residual audits."""
 import numpy as np
 import pytest
 
-from repro.core.schedules import (StageAssignment, contiguous, interleaved,
-                                  interleave_stacked)
+from repro.core.schedules import (OneFOneB, StageAssignment, contiguous,
+                                  interleaved, interleave_stacked,
+                                  one_f_one_b)
 from repro.core.schedule import SlicingScheme
-from repro.core.simulator import bubble_fraction, simulate
+from repro.core.simulator import (BWD_COST_FACTOR, bubble_fraction, simulate)
 
 
 @pytest.mark.parametrize("K,V,N", [(2, 1, 8), (4, 1, 5), (2, 2, 8),
@@ -21,16 +23,16 @@ def test_tick_table_valid(K, V, N):
 
 
 def test_contiguous_reduces_to_diagonal():
-    """V=1 tick table is the classic diagonal: rank k runs item t-k."""
+    """V=1 tick table is the classic diagonal: rank k runs item t-k fwd."""
     a = contiguous(4, 8)
     tab = a.tick_table(6)
     for t in range(tab.shape[0]):
         for k in range(4):
-            i, v = tab[t, k]
+            i, v, bwd = tab[t, k]
             if 0 <= t - k < 6:
-                assert (i, v) == (t - k, 0)
+                assert (i, v, bwd) == (t - k, 0, 0)
             else:
-                assert (i, v) == (-1, -1)
+                assert (i, v, bwd) == (-1, -1, -1)
 
 
 def test_interleaved_requires_group_divisibility():
@@ -48,8 +50,8 @@ def test_unit_index_matches_tick_table():
         for t in range(a.n_ticks(N)):
             u = t - k
             if 0 <= u < a.n_units(N):
-                i, v = a.unit_index(u)
-                assert (tab[t, k] == (i, v)).all()
+                i, v, bwd = a.unit_index(u)
+                assert (tab[t, k] == (i, v, bwd)).all()
 
 
 def test_param_permutation_rank_major():
@@ -108,3 +110,106 @@ def test_interleaved_total_latency_shrinks_bubble_only():
         d = "lockstep" if V == 1 else "interleaved"
         T = simulate(sch, K, t, discipline=d, virtual_stages=V)
         assert T == pytest.approx(N + (K - 1) / V, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# fwd+bwd unit-kind tables (1F1B, ISSUE 3)
+# ---------------------------------------------------------------------------
+GRID = [(K, D, M) for K in (1, 2, 3, 4, 8) for D in (1, 2, 4)
+        for M in (1, 2, 4)]
+
+
+@pytest.mark.parametrize("K,D,M", GRID)
+def test_one_f_one_b_table_valid(K, D, M):
+    """Grid audit of the 1F1B table: every fwd AND bwd unit exactly once,
+    fwd deps deliverable on the forward ring, bwd deps one tick behind the
+    REVERSE ring (and after their own fwd), slice-descending bwd order
+    within each microbatch, and the closed-form tick count."""
+    N = D * M
+    a = one_f_one_b(K, 24, D)
+    assert a.has_backward
+    assert a.validate(N)
+    assert a.n_units(N) == 2 * N
+    assert a.n_ticks(N) == 2 * N + 2 * M + 2 * K - 4
+
+
+@pytest.mark.parametrize("K,D,M", GRID)
+def test_peak_live_items_one_f_one_b_vs_fwd_only(K, D, M):
+    """The memory claim, as a table property: 1F1B keeps only
+    min(D·M, K + M - 1) items' residuals live per rank (flat in the
+    microbatch count D) while the fwd-only schedules hold every unit to the
+    drain (D·M·V)."""
+    N = D * M
+    assert one_f_one_b(K, 24, D).peak_live_items(N) == min(N, K + M - 1)
+    assert contiguous(K, 24).peak_live_items(N) == N
+    if N % K == 0:
+        for V in (2, 4):
+            assert interleaved(K, V, 24).peak_live_items(N) == N * V
+
+
+def test_residual_spread_bounds_ring_buffer():
+    """residual_spread >= peak_live_items and item % spread is collision-
+    free over every rank's live set (the executor's ring-buffer contract);
+    and the spread is flat in D (it is what the 1F1B executor allocates)."""
+    for K, D, M in [(2, 4, 2), (4, 2, 4), (3, 3, 2), (8, 4, 4)]:
+        N = D * M
+        a = one_f_one_b(K, 24, D)
+        R = a.residual_spread(N)
+        assert R >= a.peak_live_items(N)
+        tab = a.tick_table(N)
+        for k in range(K):
+            live = set()
+            for t in range(tab.shape[0]):
+                i, _, bwd = (int(x) for x in tab[t, k])
+                if i < 0:
+                    continue
+                if bwd:
+                    live.discard(i)
+                else:
+                    assert i % R not in {j % R for j in live}, (K, D, M, k, t)
+                    live.add(i)
+        # flat in D: the buffer depth saturates at K + 2M - 2 regardless of
+        # how many microbatches the DP planner scales to
+        cap = K + 2 * M - 2
+        assert R <= cap, (K, D, M, R)
+        for DD in (8, 16):
+            assert one_f_one_b(K, 24, DD).residual_spread(DD * M) == cap
+
+
+def test_one_f_one_b_rejects_interleaving():
+    with pytest.raises(AssertionError):
+        OneFOneB(n_ranks=4, virtual_stages=2, n_layers=8, n_microbatches=1)
+
+
+def test_simulator_one_f_one_b_discipline():
+    """The 1f1b discipline sums per-tick maxima over the fwd+bwd table:
+    cross-check against a scalar reference loop, and at M=1 with uniform
+    costs the tick count matches the contiguous fwd+bwd program while the
+    fwd/bwd rank-parity mix prices every steady-state tick at bwd cost."""
+    K, D, M = 4, 6, 2
+    costs = [1.0 + 0.1 * m for m in range(M)] * D
+    sch = SlicingScheme.from_dp(
+        sum(int(10 * c) for c in costs[:M]), D,
+        [(1, [int(10 * c) for c in costs[:M]])] * D)
+    t_of = lambda b, l, c: l / 10.0
+    T = simulate(sch, K, t_of, discipline="1f1b", include_backward=True)
+    tab = one_f_one_b(K, 1, D).tick_table(D * M)
+    ref = 0.0
+    for t in range(tab.shape[0]):
+        active = [costs[int(tab[t, k, 0])] *
+                  (BWD_COST_FACTOR if tab[t, k, 2] == 1 else 1.0)
+                  for k in range(K) if tab[t, k, 0] >= 0]
+        ref += max(active) if active else 0.0
+    assert T == pytest.approx(ref, rel=1e-12)
+    # uniform costs, M=1: ticks match contiguous fwd+bwd (2N + 2K - 2), and
+    # steady-state ticks mix fwd+bwd ranks, so they all cost a bwd
+    sch1 = SlicingScheme.uniform(32, 8, n_token_slices=1, microbatch=1)
+    one = lambda b, l, c: 1.0
+    T1 = simulate(sch1, K, one, discipline="1f1b", include_backward=True)
+    n_ticks = one_f_one_b(K, 1, 8).n_ticks(8)
+    assert n_ticks == 2 * 8 + 2 * K - 2
+    # all-but-warmup ticks at bwd cost: T1 between work floor and 2*ticks
+    assert 3 * 8 <= T1 <= BWD_COST_FACTOR * n_ticks
+    # the simulator refuses fwd-only 1f1b (the table IS fwd+bwd)
+    with pytest.raises(AssertionError):
+        simulate(sch1, K, one, discipline="1f1b")

@@ -86,6 +86,38 @@ def test_bin_token_source(tmp_path):
     assert t1.dtype == np.int32
 
 
+def test_bin_token_source_wraps_at_boundary(tmp_path):
+    """A window starting near the end of the file wraps modularly to the
+    start (the docstring's promise; the old slice silently truncated and
+    crashed in reshape)."""
+    total = 100
+    arr = np.arange(total, dtype=np.uint16)
+    f = tmp_path / "toks.bin"
+    arr.tofile(f)
+    src = BinTokenSource(str(f), vocab_size=65536)
+    # find a (step, shard) whose window crosses the end: start + n > total
+    b, s = 2, 16
+    n = b * s
+    step = next(st for st in range(1000)
+                if (st * 2_147_483_647) % total + n > total)
+    start = (step * 2_147_483_647) % total
+    out = src.tokens_at(step, 0, (b, s)).ravel()
+    np.testing.assert_array_equal(out, (start + np.arange(n)) % total)
+
+
+def test_bin_token_source_shorter_than_batch(tmp_path):
+    """A token file shorter than one b*s batch cycles instead of crashing."""
+    arr = np.arange(10, dtype=np.uint16)
+    f = tmp_path / "toks.bin"
+    arr.tofile(f)
+    src = BinTokenSource(str(f), vocab_size=65536)
+    out = src.tokens_at(0, 0, (4, 8))          # n = 32 > 10
+    assert out.shape == (4, 8)
+    np.testing.assert_array_equal(out.ravel(), np.arange(32) % 10)
+    # deterministic across calls
+    np.testing.assert_array_equal(out, src.tokens_at(0, 0, (4, 8)))
+
+
 # ------------------------------------------------------------------ checkpoint
 def test_checkpoint_roundtrip_and_retention(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2)
