@@ -1,7 +1,7 @@
 # Tier-1 verification and common dev entry points.
 PY ?= python
 
-.PHONY: test test-full bench-dp bench-smoke dryrun-executors
+.PHONY: test test-full test-kernels bench-dp bench-smoke dryrun-executors
 
 # tier-1 suite (the ROADMAP invocation, pinned here)
 test:
@@ -11,16 +11,24 @@ test:
 test-full:
 	PYTHONPATH=src $(PY) -m pytest -q
 
+# Pallas kernel suite alone, in interpret mode (the CI kernels job; on a TPU
+# host run with REPRO_PALLAS_INTERPRET=0 to exercise the compiled kernels)
+test-kernels:
+	PYTHONPATH=src REPRO_PALLAS_INTERPRET=1 $(PY) -m pytest -q -m kernels
+
 bench-dp:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 
 # fast self-asserting benchmarks (CI): DP scheduler timings + vectorized
-# cost-matrix check, the interleaved-schedule bubble assertions, and the
-# 1F1B compiled peak-memory assertions (flat in D vs contiguous's growth)
+# cost-matrix check, the interleaved-schedule bubble assertions, the
+# 1F1B compiled peak-memory assertions (flat in D vs contiguous's growth),
+# and the fused-attention HBM-linearity assertions (no quadratic score
+# matrix / repeated-KV buffers in fwd or bwd jaxprs)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 	PYTHONPATH=src $(PY) benchmarks/interleave_bench.py --assert-only
 	PYTHONPATH=src $(PY) benchmarks/memory_bench.py --quick
+	PYTHONPATH=src $(PY) benchmarks/kernel_bench.py --assert-only
 
 # rolled vs unrolled tick-executor trace/lower wall-time report
 dryrun-executors:

@@ -75,6 +75,16 @@ def layer_matmul_flops(cfg: ModelConfig) -> float:
     return qo + kv + ff
 
 
+#: Fused flash backward cost relative to the forward's 2 block matmuls
+#: (QKᵀ, PV).  The two-sweep kernel in ``repro.kernels`` runs 7: the dQ pass
+#: rebuilds QKᵀ and computes dO·Vᵀ and dS·K; the dK/dV pass rebuilds QKᵀ and
+#: dO·Vᵀ again and computes dSᵀ·Q and Pᵀ·dO.
+FLASH_BWD_ATTN_MULT = 3.5
+
+#: Parameter-matmul backward: dX and dW per forward matmul.
+MATMUL_BWD_MULT = 2.0
+
+
 def attention_context_flops(cfg: ModelConfig, l: int, ctx: int) -> float:
     """Attention score+value FLOPs for a slice of l tokens at context ctx.
     ufunc-friendly: l/ctx may be scalars or broadcastable arrays."""
@@ -100,6 +110,12 @@ class CostModel:
     def t_fwd(self, l: int, ctx: int) -> float:
         raise NotImplementedError
 
+    def t_bwd(self, l: int, ctx: int) -> float:
+        """Backward-unit latency (the 1F1B executor pays one inside every
+        steady-state tick).  Default: the simulator's bwd ≈ 2·fwd
+        convention; models with real kernel knowledge override."""
+        return 2.0 * self.t_fwd(l, ctx)
+
     def __call__(self, l: int, ctx: int) -> float:
         return self.t_fwd(l, ctx)
 
@@ -112,35 +128,131 @@ class AnalyticCostModel(CostModel):
         self.layers = layers_per_stage
         self.batch = batch
         self.tp = tp_degree
+        self.include_backward = include_backward
         self.bwd_mult = 3.0 if include_backward else 1.0   # bwd ≈ 2x fwd
         self.slowdown = stage_slowdown
         # float: keeps the array path in t_fwd out of int64 accumulation
         self._matmul_per_tok = float(layer_matmul_flops(cfg) * layers_per_stage)
 
-    def t_fwd(self, l: int, ctx: int) -> float:
-        """Scalar or elementwise-array evaluation (the DP's cost-matrix fill
-        calls this once with the whole (l, ctx) grid)."""
+    def _t(self, l, ctx, matmul_mult: float, attn_mult: float):
         hw = self.hw
         l_eff = np.maximum(l, hw.occupancy_floor)   # Fig. 3 flat region
-        flops = (self.batch * l_eff * self._matmul_per_tok
+        flops = (self.batch * l_eff * self._matmul_per_tok * matmul_mult
                  + self.batch * attention_context_flops(self.cfg, l_eff, ctx)
-                 * self.layers)
-        t_compute = flops * self.bwd_mult / (self.tp * hw.peak_flops * hw.efficiency)
+                 * self.layers * attn_mult)
+        t_compute = flops / (self.tp * hw.peak_flops * hw.efficiency)
         # stage boundary transfer: activations of the slice (bf16)
         bytes_x = self.batch * l * self.cfg.d_model * 2
         t_comm = hw.link_latency + bytes_x / hw.link_bw
         return self.slowdown * (t_compute + t_comm)
 
+    def t_fwd(self, l: int, ctx: int) -> float:
+        """Scalar or elementwise-array evaluation (the DP's cost-matrix fill
+        calls this once with the whole (l, ctx) grid).  NB: with the default
+        ``include_backward=True`` this prices the COMBINED fwd+bwd unit
+        (bwd ≈ 2·fwd, the symmetric-pipeline convention the DP objective
+        uses); construct with ``include_backward=False`` for the forward
+        alone."""
+        return self._t(l, ctx, self.bwd_mult, self.bwd_mult)
+
+    def t_bwd(self, l: int, ctx: int) -> float:
+        """Backward unit ALONE, priced from the FUSED flash-backward kernel:
+        parameter matmuls transpose at 2× forward, but attention pays
+        ``FLASH_BWD_ATTN_MULT`` (the two-sweep dQ / dK-dV recompute — see
+        repro.kernels.terapipe_attention_bwd), not the dense-reference 2×.
+        The cotangent rides the reverse ring: same wire bytes.
+
+        Only meaningful on an ``include_backward=False`` instance, where
+        t_fwd is the forward alone and 1F1B consumers sum t_fwd + t_bwd per
+        separately-scheduled unit — on the combined-unit default, summing
+        the two would double-count the backward, so this guards."""
+        assert not self.include_backward, (
+            "t_bwd prices the backward unit alone; this model was built "
+            "with include_backward=True, whose t_fwd already contains the "
+            "backward (fwd+bwd combined unit).  Build with "
+            "include_backward=False to price fwd and bwd units separately "
+            "(1F1B-style schedules).")
+        return self._t(l, ctx, MATMUL_BWD_MULT, FLASH_BWD_ATTN_MULT)
+
 
 class TableCostModel(CostModel):
+    """Measured (l, ctx) -> seconds tables.  ``bwd_table`` holds measured
+    backward-unit durations (e.g. from the fused flash-backward kernel via
+    :func:`measure_kernel_cost_table`); absent, t_bwd falls back to the
+    2·fwd convention."""
+
     def __init__(self, table: Dict[Tuple[int, int], float],
-                 granularity: int = 1):
+                 granularity: int = 1,
+                 bwd_table: Optional[Dict[Tuple[int, int], float]] = None):
         self.table = dict(table)
+        self.bwd_table = dict(bwd_table) if bwd_table else None
         self.g = granularity
 
+    def _key(self, l: int, ctx: int) -> Tuple[int, int]:
+        return (self.g * int(round(l / self.g)),
+                self.g * int(round(ctx / self.g)))
+
     def t_fwd(self, l: int, ctx: int) -> float:
-        key = (self.g * int(round(l / self.g)), self.g * int(round(ctx / self.g)))
-        return self.table[key]
+        return self.table[self._key(l, ctx)]
+
+    def t_bwd(self, l: int, ctx: int) -> float:
+        if self.bwd_table is None:
+            return 2.0 * self.t_fwd(l, ctx)
+        return self.bwd_table[self._key(l, ctx)]
+
+
+def measure_kernel_cost_table(pairs, *, batch: int = 1, n_heads: int = 8,
+                              n_kv_heads: Optional[int] = None,
+                              head_dim: int = 64, dtype=None,
+                              granularity: int = 1,
+                              n_iters: int = 5) -> TableCostModel:
+    """Measured t_fwd/t_bwd entries from the FUSED Pallas attention op.
+
+    Times ``repro.kernels.ops.terapipe_attention`` forward and its
+    custom-vjp backward (the flash dQ/dK-dV kernels) on each ``(l, ctx)``
+    pair and returns a :class:`TableCostModel` whose bwd entries come from
+    the kernel the 1F1B executor actually runs — the paper's live-cluster
+    measurement loop (§4.1), pointed at the fused kernels.  Wall-clock of
+    whatever backend is active (interpret mode on CPU containers: relative
+    shape, not TPU-absolute).
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    hkv = n_kv_heads or n_heads
+    fwd_tab: Dict[Tuple[int, int], float] = {}
+    bwd_tab: Dict[Tuple[int, int], float] = {}
+    rng = jax.random.PRNGKey(0)
+    dtype = dtype or jnp.float32
+    for l, ctx in pairs:
+        sk = ctx + l
+        q = jax.random.normal(rng, (batch, l, n_heads, head_dim), dtype)
+        k = jax.random.normal(rng, (batch, sk, hkv, head_dim), dtype)
+        v = jax.random.normal(rng, (batch, sk, hkv, head_dim), dtype)
+        fwd = jax.jit(lambda q, k, v, c=ctx: kops.terapipe_attention(
+            q, k, v, ctx_len=c))
+        vjp = jax.jit(lambda q, k, v, c=ctx: jax.vjp(
+            lambda q, k, v: kops.terapipe_attention(q, k, v, ctx_len=c),
+            q, k, v)[1](jnp.ones((batch, l, n_heads, head_dim), dtype)))
+
+        def _time(fn):
+            jax.tree.leaves(fn(q, k, v))[0].block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(n_iters):
+                jax.tree.leaves(fn(q, k, v))[0].block_until_ready()
+            return (time.perf_counter() - t0) / n_iters
+
+        t_f = _time(fwd)
+        t_fb = _time(vjp)                       # vjp pays fwd residuals + bwd
+        key = (granularity * int(round(l / granularity)),
+               granularity * int(round(ctx / granularity)))
+        fwd_tab[key] = t_f
+        bwd_tab[key] = max(t_fb - t_f, t_f)     # bwd-only, floored at fwd
+    return TableCostModel(fwd_tab, granularity=granularity, bwd_table=bwd_tab)
 
 
 class BilinearFitCostModel(CostModel):

@@ -152,6 +152,13 @@ class TeraPipeConfig:
     # gated cache mutation they are exact no-ops (tests assert bit-identical
     # final caches); never needed in production.
     extra_ticks: int = 0
+    # route stage attention through the Pallas flash kernels (fused fwd+bwd,
+    # traced-ctx scalar prefetch — see repro.kernels).  None defers to the
+    # ModelConfig's own ``use_kernel``; True/False overrides it for the
+    # stage-local model BOTH executors run (the fwd-only scan differentiates
+    # through the kernel's custom_vjp; the 1F1B executor's per-unit jax.vjp
+    # hits the fused backward kernels inside every steady-state tick).
+    use_kernel: Optional[bool] = None
 
 
 def _group_split(model: Model):
@@ -259,6 +266,8 @@ class _Plan:
         self.n_main = n_main
 
         # local-config model: block fns see TP-local head counts in shard_map
+        if tcfg.use_kernel is not None:
+            cfg = cfg.replace(use_kernel=tcfg.use_kernel)
         if tp > 1:
             assert cfg.n_heads % tp == 0, (cfg.n_heads, tp)
             kv_local = (cfg.n_kv_heads // tp if cfg.n_kv_heads % tp == 0

@@ -1,53 +1,83 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 On this CPU container kernels execute in interpret mode (the kernel body runs
-as plain JAX ops); on TPU set REPRO_PALLAS_INTERPRET=0 to compile for real.
+as plain JAX ops); on TPU set REPRO_PALLAS_INTERPRET=0 to compile for real
+(see EXPERIMENTS.md §Kernels).
+
+``terapipe_attention`` is fully fused fwd+bwd: the forward saves (O, lse)
+residuals and the backward runs the flash dQ / dK-dV Pallas kernels
+(terapipe_attention_bwd.py) — no (l, ctx+l) score matrix and no repeated GQA
+K/V ever touch HBM in either direction.  ``ctx_len`` may be a traced int32
+scalar (scalar-prefetch operand): the pipeline executors' ``attn_sliced_dyn``
+path routes through here with the per-tick context offset.
+
+The custom_vjp wrapper is defined ONCE per static configuration (block
+sizes, interpret mode) at module scope via an lru_cache — a per-call closure
+would defeat jit caching and retrace on every call.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
 import jax.numpy as jnp
 
 from .decode_attention import decode_attention_kernel
-from .ref import terapipe_attention_ref
-from .terapipe_attention import terapipe_attention_kernel
+from .terapipe_attention import (DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q,
+                                 terapipe_attention_fwd)
+from .terapipe_attention_bwd import terapipe_attention_bwd
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
-def terapipe_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                       *, ctx_len: int) -> jnp.ndarray:
-    """Flash attention of a query slice at context offset (B, l, H, hd).
+@functools.lru_cache(maxsize=None)
+def _make_flash_attention(blk_q: int, blk_kv: int, interpret: bool):
+    """custom_vjp-wrapped flash attention for one static kernel config.
 
-    k/v may have fewer (GQA) heads; they are expanded here.  Differentiable
-    via a custom-free fallback: backward uses the reference formulation (the
-    kernel is the inference/forward hot path; a fused bwd kernel is a noted
-    follow-up in EXPERIMENTS.md §Perf).
+    Module-level + cached: the returned function object is stable across
+    calls, so jit tracing caches hit.  ``ctx`` is a traced operand (int32
+    scalar), NOT part of the cache key.
     """
-    h, hkv = q.shape[2], k.shape[2]
-    if hkv != h:
-        rep = h // hkv
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
 
     @jax.custom_vjp
-    def _attn(q, k, v):
-        return terapipe_attention_kernel(q, k, v, ctx_len=ctx_len,
-                                         interpret=_INTERPRET)
+    def attn(q, k, v, ctx):
+        out, _ = terapipe_attention_fwd(q, k, v, ctx, blk_q=blk_q,
+                                        blk_kv=blk_kv, interpret=interpret)
+        return out
 
-    def _fwd(q, k, v):
-        return _attn(q, k, v), (q, k, v)
+    def _fwd(q, k, v, ctx):
+        out, lse = terapipe_attention_fwd(q, k, v, ctx, blk_q=blk_q,
+                                          blk_kv=blk_kv, interpret=interpret)
+        return out, (q, k, v, ctx, out, lse)
 
     def _bwd(res, g):
-        q, k, v = res
-        _, vjp = jax.vjp(lambda q, k, v: terapipe_attention_ref(q, k, v, ctx_len),
-                         q, k, v)
-        return vjp(g)
+        q, k, v, ctx, out, lse = res
+        # delta = rowsum(dO ∘ O): linear in l, plain jnp
+        delta = jnp.einsum("blhd,blhd->bhl", g.astype(jnp.float32),
+                           out.astype(jnp.float32))
+        dq, dk, dv = terapipe_attention_bwd(
+            q, k, v, g.astype(q.dtype), lse, delta, ctx,
+            blk_q=blk_q, blk_kv=blk_kv, interpret=interpret)
+        return dq, dk, dv, None
 
-    _attn.defvjp(_fwd, _bwd)
-    return _attn(q, k, v)
+    attn.defvjp(_fwd, _bwd)
+    return attn
+
+
+def terapipe_attention(q, k, v, *, ctx_len,
+                       blk_q: int = DEFAULT_BLOCK_Q,
+                       blk_kv: int = DEFAULT_BLOCK_KV) -> jnp.ndarray:
+    """Flash attention of a query slice at context offset ``ctx_len``.
+
+    q: (B, l, Hq, hd); k/v: (B, Sk, Hkv, hd) with Sk >= ctx_len + l.  GQA
+    (Hkv < Hq) is resolved inside the kernels' BlockSpec index maps — no
+    repeat in HBM.  ``ctx_len`` may be a python int (static TeraPipe slices)
+    or a traced int32 scalar (the executors' lockstep dynamic-ctx path).
+    Differentiable via the fused flash backward kernels.
+    """
+    attn = _make_flash_attention(blk_q, blk_kv, _INTERPRET)
+    return attn(q, k, v, jnp.asarray(ctx_len, jnp.int32))
 
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

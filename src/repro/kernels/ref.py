@@ -8,20 +8,27 @@ import jax.numpy as jnp
 
 
 def terapipe_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                           ctx_len: int) -> jnp.ndarray:
+                           ctx_len) -> jnp.ndarray:
     """Attention of a query slice at absolute offset ``ctx_len``.
 
-    q: (B, l, H, hd); k, v: (B, ctx_len + l, H, hd).
-    Query i (absolute position ctx_len+i) attends keys [0, ctx_len+i].
+    q: (B, l, Hq, hd); k, v: (B, Sk, Hkv, hd) with Sk >= ctx_len + l; GQA
+    heads (Hkv < Hq) are repeated here (this is the oracle — the kernel must
+    match it WITHOUT the repeat).  ``ctx_len`` may be a traced int32 scalar
+    (the masks are built from arange + ctx, shape-static).  Query i
+    (absolute position ctx_len+i) attends keys [0, ctx_len+i]; keys at or
+    beyond ctx_len + l (stale cache tail) are excluded.
     """
     b, l, h, hd = q.shape
-    sk = k.shape[1]
+    sk, hkv = k.shape[1], k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
     scale = 1.0 / math.sqrt(hd)
     logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                         preferred_element_type=jnp.float32) * scale
     qp = jnp.arange(l)[:, None] + ctx_len
     kp = jnp.arange(sk)[None, :]
-    logits = jnp.where(qp >= kp, logits, -jnp.inf)
+    logits = jnp.where((qp >= kp) & (kp < ctx_len + l), logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 

@@ -1,15 +1,28 @@
-"""Pallas TPU flash-attention kernel for the TeraPipe inner op.
+"""Pallas TPU flash-attention forward kernel for the TeraPipe inner op.
 
-Computes attention of a query slice (length l, absolute offset ctx) over
-keys/values of length ctx + l — the paper's t_fwd(l, ctx) hot spot — without
-materializing the (l, ctx+l) score matrix in HBM.
+Computes attention of a query slice (length l, absolute offset ``ctx``) over
+keys/values of length >= ctx + l — the paper's t_fwd(l, ctx) hot spot —
+without materializing the (l, ctx+l) score matrix in HBM, and additionally
+emits the per-row logsumexp so the fused backward (terapipe_attention_bwd)
+can rebuild the probabilities block-by-block instead of recomputing the
+whole forward through the dense reference.
 
-TPU mapping (DESIGN.md §3): grid (B, H, n_q_blocks, n_kv_blocks) with the KV
-block index innermost — TPU grids execute sequentially minor-to-major, so the
-running-softmax state (m, s, acc) lives in VMEM scratch and persists across
-the KV sweep of one query block.  Blocks are 128×128 (MXU-aligned); the
-output is written on the last KV iteration.  Fully-masked KV blocks (beyond
-the causal frontier ctx + (iq+1)·blk_q) are skipped with pl.when.
+TPU mapping (DESIGN.md §3): grid (B, Hq, n_q_blocks, n_kv_blocks) with the
+KV block index innermost — TPU grids execute sequentially minor-to-major, so
+the running-softmax state (m, s, acc) lives in VMEM scratch and persists
+across the KV sweep of one query block.  Three properties added by ISSUE 4:
+
+* ``ctx`` is a SCALAR-PREFETCH operand (``pltpu.PrefetchScalarGridSpec``):
+  it may be a traced int32 — the lockstep pipeline executors run every stage
+  at a different, data-dependent context offset (``attn_sliced_dyn``), and
+  the causal-frontier block skip is computed from the prefetched scalar, so
+  blocks past ``ctx + l`` cost nothing even though the grid spans the whole
+  (static-size) KV cache.
+* GQA is resolved in the K/V BlockSpec index map (kv head = q head // rep,
+  as in decode_attention.py) — the repeated heads never exist in HBM.
+* Block sizes are rounded to MXU alignment instead of being clamped to a
+  ragged slice length (the DP planner emits e.g. l=96 slices); the position
+  masks make the pad exact.
 
 Validated in interpret mode against kernels.ref (CPU container; TPU is the
 compile target).
@@ -26,14 +39,28 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_KV = 128
+MXU_ALIGN = 128
 NEG_INF = float("-inf")
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, s_scr, acc_scr, *,
-                 ctx_len: int, sk: int, blk_q: int, blk_kv: int, scale: float):
+def round_up(n: int, align: int) -> int:
+    return -(-n // align) * align
+
+
+def align_block(blk: int, n: int, align: int = MXU_ALIGN) -> int:
+    """Block size for an extent of ``n``: never larger than the aligned-up
+    extent, never clamped to an UNALIGNED extent (a ragged l=96 slice gets a
+    full 128-wide MXU block + mask, not a 96-wide one)."""
+    return min(blk, round_up(max(n, 1), align))
+
+
+def _fwd_kernel(ctx_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, s_scr, acc_scr, *,
+                l: int, blk_q: int, blk_kv: int, scale: float):
     iq = pl.program_id(2)
     ikv = pl.program_id(3)
     n_kv = pl.num_programs(3)
+    ctx = ctx_ref[0]
 
     @pl.when(ikv == 0)
     def _init():
@@ -41,13 +68,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, s_scr, acc_scr, *,
         s_scr[...] = jnp.zeros_like(s_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # absolute positions of this q block / kv block
-    q_pos = ctx_len + iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 0)
-    kv_pos = ikv * blk_kv + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 1)
-
-    # skip blocks fully beyond the causal frontier of this q block
-    frontier = ctx_len + (iq + 1) * blk_q   # first invalid kv position + 1
-    @pl.when(ikv * blk_kv < frontier)
+    # skip blocks fully beyond this q block's causal frontier (and beyond the
+    # ctx + l valid-key limit: pad rows would otherwise attend stale cache)
+    @pl.when(ikv * blk_kv < ctx + jnp.minimum((iq + 1) * blk_q, l))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)          # (blk_q, hd)
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # (blk_kv, hd)
@@ -55,17 +78,17 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, s_scr, acc_scr, *,
         logits = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale     # (blk_q, blk_kv)
-        mask = (q_pos >= kv_pos) & (kv_pos < sk)
+        q_pos = ctx + iq * blk_q + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_kv), 0)
+        kv_pos = ikv * blk_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_kv), 1)
+        mask = (q_pos >= kv_pos) & (kv_pos < ctx + l)
         logits = jnp.where(mask, logits, NEG_INF)
 
         m_prev = m_scr[...]                                 # (blk_q, 1)
-        m_cur = jnp.max(logits, axis=-1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        # guard fully-masked rows (can't happen for valid rows: diag present)
-        p = jnp.exp(logits - m_new)
-        p = jnp.where(mask, p, 0.0)
-        alpha = jnp.exp(m_prev - m_new)
-        alpha = jnp.where(jnp.isfinite(m_prev), alpha, 0.0)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
         s_scr[...] = s_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
@@ -73,8 +96,80 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, s_scr, acc_scr, *,
 
     @pl.when(ikv == n_kv - 1)
     def _finalize():
-        denom = jnp.maximum(s_scr[...], 1e-30)
-        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        s = jnp.maximum(s_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / s).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = (m_scr[...] + jnp.log(s))[:, 0]
+
+
+def _pad_seq(a, pad):
+    return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else a
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q", "blk_kv", "interpret"))
+def terapipe_attention_fwd(q, k, v, ctx, *,
+                           blk_q: int = DEFAULT_BLOCK_Q,
+                           blk_kv: int = DEFAULT_BLOCK_KV,
+                           interpret: bool = False):
+    """Fused forward: returns (out, lse).
+
+    q: (B, l, Hq, hd); k, v: (B, Sk, Hkv, hd) GQA-native, Sk >= ctx + l;
+    ctx: int32 scalar, may be TRACED (scalar-prefetch).  lse: (B, Hq, l) f32.
+    """
+    b, l, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    assert k.shape == v.shape and hq % hkv == 0, (q.shape, k.shape)
+    rep = hq // hkv
+    blk_q = align_block(blk_q, l)
+    blk_kv = align_block(blk_kv, sk)
+    scale = 1.0 / math.sqrt(hd)
+
+    q = _pad_seq(q, -l % blk_q)
+    k = _pad_seq(k, -sk % blk_kv)
+    v = _pad_seq(v, -sk % blk_kv)
+    lp, skp = q.shape[1], k.shape[1]
+    ctx_arr = jnp.asarray(ctx, jnp.int32).reshape((1,))
+
+    # GQA: kv-head block = q head // rep — no repeat in HBM.  The kv BLOCK
+    # index is clamped to this q block's causal frontier (computed from the
+    # prefetched ctx): grid steps the pl.when guard skips revisit the same
+    # block, so their HBM->VMEM copies are elided — per-block KV traffic is
+    # O(ctx + l), not O(Sk), even though the grid spans the whole cache.
+    def _kv_index(bi, hi, qi, ki, ctx_ref):
+        last = (ctx_ref[0] + jnp.minimum((qi + 1) * blk_q, l) - 1) // blk_kv
+        return (bi, jnp.minimum(ki, last), hi // rep, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hq, lp // blk_q, skp // blk_kv),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd),
+                         lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, blk_kv, 1, hd), _kv_index),
+            pl.BlockSpec((1, blk_kv, 1, hd), _kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd),
+                         lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, 1, blk_q),
+                         lambda bi, hi, qi, ki, *_: (bi, hi, qi)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((blk_q, 1), jnp.float32),    # running denom
+            pltpu.VMEM((blk_q, hd), jnp.float32),   # output acc
+        ],
+    )
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, l=l, blk_q=blk_q, blk_kv=blk_kv,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, lp, hq, hd), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, lp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ctx_arr, q, k, v)
+    return out[:, :l], lse[:, :, :l]
 
 
 @functools.partial(jax.jit, static_argnames=("ctx_len", "blk_q", "blk_kv",
@@ -83,43 +178,8 @@ def terapipe_attention_kernel(q, k, v, *, ctx_len: int,
                               blk_q: int = DEFAULT_BLOCK_Q,
                               blk_kv: int = DEFAULT_BLOCK_KV,
                               interpret: bool = False):
-    """q: (B, l, H, hd); k, v: (B, Sk, H, hd) with Sk >= ctx_len + l.
-    Heads must already be GQA-expanded to match q."""
-    b, l, h, hd = q.shape
-    sk = k.shape[1]
-    assert k.shape == v.shape and k.shape[2] == h, (q.shape, k.shape)
-    blk_q = min(blk_q, l)
-    blk_kv = min(blk_kv, sk)
-    scale = 1.0 / math.sqrt(hd)
-
-    # pad seq dims to block multiples (masked out by position checks)
-    l_pad = -l % blk_q
-    sk_pad = -sk % blk_kv
-    if l_pad:
-        q = jnp.pad(q, ((0, 0), (0, l_pad), (0, 0), (0, 0)))
-    if sk_pad:
-        k = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
-    lp, skp = l + l_pad, sk + sk_pad
-
-    grid = (b, h, lp // blk_q, skp // blk_kv)
-    out = pl.pallas_call(
-        functools.partial(_attn_kernel, ctx_len=ctx_len, sk=sk,
-                          blk_q=blk_q, blk_kv=blk_kv, scale=scale),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, blk_q, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
-            pl.BlockSpec((1, blk_kv, 1, hd), lambda bi, hi, qi, ki: (bi, ki, hi, 0)),
-            pl.BlockSpec((1, blk_kv, 1, hd), lambda bi, hi, qi, ki: (bi, ki, hi, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, blk_q, 1, hd),
-                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, lp, h, hd), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((blk_q, 1), jnp.float32),    # running max
-            pltpu.VMEM((blk_q, 1), jnp.float32),    # running denom
-            pltpu.VMEM((blk_q, hd), jnp.float32),   # output acc
-        ],
-        interpret=interpret,
-    )(q, k, v)
-    return out[:, :l]
+    """Back-compat forward-only entry (static ctx_len; heads may be GQA or
+    already expanded).  New code should use ops.terapipe_attention."""
+    out, _ = terapipe_attention_fwd(q, k, v, jnp.int32(ctx_len), blk_q=blk_q,
+                                    blk_kv=blk_kv, interpret=interpret)
+    return out

@@ -68,7 +68,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              layout: str = "tp", fsdp: bool = True, capacity=None,
              seqpar: bool = False, terapipe_dp: bool = False,
              virtual_stages: int = 1, variant: str = "",
-             schedule: str = "contiguous") -> dict:
+             schedule: str = "contiguous", use_kernel: bool = False) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
     if remat_policy != "full":
@@ -95,7 +95,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             lowered, n_chips = _lower_terapipe(
                 model, shape, multi_pod, terapipe_slices, terapipe_pipe,
                 dp_plan=terapipe_dp, virtual_stages=virtual_stages,
-                schedule=schedule)
+                schedule=schedule, use_kernel=use_kernel)
         else:
             lowered, n_chips = _lower_gspmd(model, cfg, shape, multi_pod,
                                             param_dtype=param_dtype,
@@ -203,7 +203,8 @@ def _lower_gspmd(model, cfg, shape, multi_pod, param_dtype=None,
 
 def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
                     dp_plan: bool = False, unroll: bool = False,
-                    virtual_stages: int = 1, schedule: str = "contiguous"):
+                    virtual_stages: int = 1, schedule: str = "contiguous",
+                    use_kernel: bool = False):
     from repro.core.pipeline import (TeraPipeConfig,
                                      make_terapipe_value_and_grad)
     from repro.launch.steps import abstract_init, abstract_opt_state
@@ -264,7 +265,8 @@ def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
                           tp_axis="tp" if tp > 1 else None,
                           data_axes=daxes, unroll=unroll,
                           schedule=schedule,
-                          virtual_stages=virtual_stages)
+                          virtual_stages=virtual_stages,
+                          use_kernel=True if use_kernel else None)
     structs, specs = abstract_init(model)
     with use_mesh(mesh):
         vg_fn, param_sh_fn = make_terapipe_value_and_grad(
@@ -372,6 +374,9 @@ def main():
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--capacity", type=float, default=None)
     ap.add_argument("--seqpar", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="terapipe mode: route stage attention through the "
+                    "Pallas flash kernels (pair with --variant to tag cells)")
     ap.add_argument("--terapipe-dp", action="store_true")
     ap.add_argument("--variant", default="")
     ap.add_argument("--compare-executors", action="store_true",
@@ -425,7 +430,8 @@ def main():
                        fsdp=not args.no_fsdp, capacity=args.capacity,
                        seqpar=args.seqpar, terapipe_dp=args.terapipe_dp,
                        virtual_stages=args.virtual_stages,
-                       variant=args.variant, schedule=args.schedule)
+                       variant=args.variant, schedule=args.schedule,
+                       use_kernel=args.use_kernel)
         if not (rec.get("ok") or rec.get("skipped")):
             n_fail += 1
     sys.exit(1 if n_fail else 0)

@@ -81,7 +81,8 @@ def build_value_and_grad(model, specs, mesh, args):
         pipe_axis="pipe", tp_axis=None, data_axes=("data",),
         unroll=args.unroll,
         schedule=schedule,
-        virtual_stages=args.virtual_stages)
+        virtual_stages=args.virtual_stages,
+        use_kernel=True if args.use_kernel else None)
     vg_fn, _ = make_terapipe_value_and_grad(model, specs, mesh, tcfg,
                                             args.seq, args.batch)
     return vg_fn
@@ -113,6 +114,10 @@ def main(argv=None):
                     help="V layer chunks per pipeline rank (interleaved "
                     "schedule; V>1 implies --schedule interleaved). Needs "
                     "microbatches*token-slices divisible by the pipe degree")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route attention through the Pallas flash kernels "
+                    "(fused fwd+bwd; both pipeline schedules and gspmd). "
+                    "Interpret mode off-TPU — see EXPERIMENTS.md §Kernels")
     ap.add_argument("--unroll", action="store_true",
                     help="unrolled tick loop (debug/differential testing; "
                     "trace time grows with D*M)")
@@ -132,6 +137,8 @@ def main(argv=None):
         ap.error("--schedule 1f1b is a V=1 schedule (see core/schedules)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.use_kernel:
+        cfg = cfg.replace(use_kernel=True)   # gspmd path; terapipe overrides
     if cfg.family == "moe":
         args.seq = max(args.seq, cfg.moe_block)
     model = build_model(cfg)

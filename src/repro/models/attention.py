@@ -8,8 +8,11 @@ Modes
 * ``decode``  – one new token against a fixed-capacity KV cache (serving).
 
 The sliced mode is the paper's inner computation t_fwd(l, ctx).  When
-``cfg.use_kernel`` is set, full/sliced modes route through the Pallas flash
-kernel in :mod:`repro.kernels`.
+``cfg.use_kernel`` is set, the full/sliced/sliced_dyn modes route through
+the Pallas flash kernel in :mod:`repro.kernels` (GQA heads stay native —
+the kernels resolve the group in their BlockSpec index maps) — including
+the TRACED-ctx ``sliced_dyn`` path both pipeline executors actually run,
+with a fully fused flash backward.
 """
 from __future__ import annotations
 
@@ -199,9 +202,12 @@ def attn_sliced_dyn(p, cfg: ModelConfig, x_slice: jnp.ndarray, kv_cache, ctx,
     at a given tick each stage works at a different ctx, so ctx is data).
 
     Attends over the FULL cache with an absolute-position causal mask; entries
-    beyond ctx+iq are unwritten/stale and masked out.  Attention FLOPs are
-    ~2x the static-ctx path (can't statically trim the key range) — the Pallas
-    kernel recovers this on real TPU; see DESIGN.md.
+    beyond ctx+iq are unwritten/stale and masked out.  Under ``cfg.use_kernel``
+    this routes through the Pallas flash kernel with ``ctx`` as a
+    scalar-prefetch operand — the causal-frontier block skip recovers the
+    ~2x FLOPs the pure-jnp path pays for not statically trimming the key
+    range, and the fused backward keeps the 1F1B executor's per-tick bwd off
+    the dense (l, ctx+l) score matrix.
     """
     b, l, _ = x_slice.shape
     positions = jnp.arange(l)[None, :] + ctx
@@ -210,13 +216,18 @@ def attn_sliced_dyn(p, cfg: ModelConfig, x_slice: jnp.ndarray, kv_cache, ctx,
     ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, ctx, 0, 0))
     cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, ctx, 0, 0))
     lmax = ck.shape[1]
-    qp = jnp.arange(l)[:, None] + ctx              # absolute query positions
-    kp = jnp.arange(lmax)[None, :]
-    mask = qp >= kp
-    if window:
-        mask &= (qp - kp) < window
-    out = attention_scores_gqa(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                               mask=mask[None])
+    if cfg.use_kernel and window == 0:
+        from repro.kernels import ops as kops
+        out = kops.terapipe_attention(q, ck.astype(q.dtype),
+                                      cv.astype(q.dtype), ctx_len=ctx)
+    else:
+        qp = jnp.arange(l)[:, None] + ctx          # absolute query positions
+        kp = jnp.arange(lmax)[None, :]
+        mask = qp >= kp
+        if window:
+            mask &= (qp - kp) < window
+        out = attention_scores_gqa(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                   mask=mask[None])
     return _out_proj(p, cfg, out, b, l, x_slice.dtype), (ck, cv)
 
 

@@ -10,6 +10,8 @@ from repro.kernels import ops
 from repro.kernels.ref import terapipe_attention_ref
 from repro.kernels.terapipe_attention import terapipe_attention_kernel
 
+pytestmark = pytest.mark.kernels
+
 
 def _rand(shape, dtype, seed):
     return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
@@ -59,7 +61,7 @@ def test_ops_wrapper_gqa_and_grad():
     ref = terapipe_attention_ref(q, kf, vf, 16)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
-    # gradient flows through the custom-vjp (reference backward)
+    # gradient flows through the custom-vjp (fused flash backward kernels)
     g = jax.grad(lambda q: ops.terapipe_attention(q, k, v, ctx_len=16).sum())(q)
     gr = jax.grad(lambda q: terapipe_attention_ref(q, kf, vf, 16).sum())(q)
     np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=2e-5,

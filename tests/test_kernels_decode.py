@@ -7,6 +7,8 @@ import pytest
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.ref import decode_attention_ref
 
+pytestmark = pytest.mark.kernels
+
 
 def _rand(shape, dtype, seed):
     return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
