@@ -20,10 +20,11 @@ bench-dp:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 
 # fast self-asserting benchmarks (CI): DP scheduler timings + vectorized
-# cost-matrix check, the interleaved-schedule bubble assertions, the
-# 1F1B compiled peak-memory assertions (flat in D vs contiguous's growth),
-# and the fused-attention HBM-linearity assertions (no quadratic score
-# matrix / repeated-KV buffers in fwd or bwd jaxprs)
+# cost-matrix check, the interleaved-schedule bubble assertions (incl.
+# interleaved-1f1b strictly beating plain 1f1b), the 1F1B-family compiled
+# peak-memory assertions (1f1b AND interleaved-1f1b flat in D vs
+# contiguous's growth), and the fused-attention HBM-linearity assertions
+# (no quadratic score matrix / repeated-KV buffers in fwd or bwd jaxprs)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 	PYTHONPATH=src $(PY) benchmarks/interleave_bench.py --assert-only

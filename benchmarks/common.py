@@ -22,6 +22,22 @@ def cost_model_for(setting: Setting, batch: int = 1, seq_len: int = SEQ_LEN):
                              include_backward=True)
 
 
+def unit_cost_model_for(setting: Setting, batch: int = 1):
+    """Per-UNIT pricers for the explicit-bwd (1F1B-family) disciplines:
+    ``(t_of, t_bwd_of)`` callables for simulate()/bubble_fraction(), built
+    on a fwd-only AnalyticCostModel so fwd and bwd units are priced
+    separately via ``CostModel.unit_cost`` (the schedule-IR unit-kind
+    form).  The single construction both interleave_bench and
+    benchmarks/schedule_report use — the two surfaces must report the same
+    metric."""
+    cfg = get_config(setting.model)
+    lps = max(1, cfg.n_layers // setting.n_pipe)
+    cm = AnalyticCostModel(cfg, V100_AWS, layers_per_stage=lps, batch=batch,
+                           tp_degree=setting.n_op, include_backward=False)
+    return (lambda b, l, c: cm.unit_cost(l, c),
+            lambda b, l, c: cm.unit_cost(l, c, is_bwd=True))
+
+
 def latency_of_scheme(setting: Setting, scheme: SlicingScheme,
                       seq_len: int = SEQ_LEN, discipline: str = "async"):
     def t_of(b, l, ctx):

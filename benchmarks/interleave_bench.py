@@ -4,6 +4,10 @@ For V in {1, 2, 4} reports:
   * the simulated bubble fraction of a paper-shape schedule under the
     lockstep executor discipline (V=1 contiguous) vs the interleaved
     discipline (V >= 2) — must shrink strictly and ~1/V;
+  * the same comparison for the explicit-backward family: plain 1f1b (V=1)
+    vs skew-buffered interleaved-1f1b (V >= 2), priced from the same tick
+    tables the unified executor interprets — interleaving must strictly
+    shrink the 1F1B bubble too;
   * trace+lower wall time of the rolled executor at each V (subprocess with
     forced host devices): the tick body gathers its chunk dynamically, so
     deeper interleaves cost ~nothing to trace.
@@ -61,7 +65,28 @@ def bubble_part(emit):
         w = (K - 1) / V
         ratio = (N + K - 1) / (V * (N + w))
         assert frac[V] <= frac[1] * ratio * 1.10, (V, frac, ratio)
-    return frac
+
+    # the 1F1B family on the same scheme (fwd+bwd tables, priced from the
+    # SAME tick tables the executor interprets): skew-buffered interleaved
+    # 1F1B must strictly beat plain 1F1B's bubble fraction — chunk-sized
+    # (1/V) fill/drain against the same rank-parity fwd/bwd mix.  The
+    # shared per-unit pricer (fwd-only durations + CostModel.unit_cost bwd
+    # units, simulate()'s explicit-bwd contract) also feeds
+    # benchmarks/schedule_report.py, so the two surfaces report the same
+    # metric.
+    from benchmarks.common import unit_cost_model_for
+    t_of_u, t_bwd_of = unit_cost_model_for(s)
+    b1f1b = {}
+    for V in VS:
+        disc = "1f1b" if V == 1 else "interleaved-1f1b"
+        b1f1b[V] = bubble_fraction(
+            scheme, K, t_of_u, discipline=disc, virtual_stages=V,
+            include_backward=True, t_bwd_of=t_bwd_of)
+        emit(f"interleave/setting{s.idx}_{s.model}_K{K}_V{V}_1f1b_bubble",
+             b1f1b[V] * 1e6, f"bubble_frac={b1f1b[V]:.4f}")
+    assert b1f1b[2] < b1f1b[1], b1f1b
+    assert b1f1b[4] < b1f1b[2], b1f1b
+    return frac, b1f1b
 
 
 _TRACE_CODE = """

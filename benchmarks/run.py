@@ -2,6 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement).
     PYTHONPATH=src python -m benchmarks.run [--only table2]
+
+``--json`` instead collects the machine-readable per-schedule perf report
+(bubble fraction, trace+lower seconds, compiled peak temp bytes for every
+registered schedule — see benchmarks/schedule_report.py) and writes it to
+``BENCH_schedules.json`` at the repo root, so the perf trajectory is
+tracked across PRs by diffing one file.
 """
 import argparse
 import sys
@@ -18,7 +24,22 @@ SUITES = ["table2_main", "table3_dp_ablation", "table4_seqlen",
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write the per-schedule perf report to "
+                    "BENCH_schedules.json at the repo root (bubble "
+                    "fraction, trace+lower seconds, compiled peak temp "
+                    "bytes per registered schedule) instead of running "
+                    "the CSV suites")
+    ap.add_argument("--json-out", default=None,
+                    help="override the --json output path")
     args = ap.parse_args()
+
+    if args.json:
+        from benchmarks import schedule_report
+        out = (Path(args.json_out) if args.json_out
+               else schedule_report.DEFAULT_OUT)
+        schedule_report.collect(out)
+        return
 
     def emit(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.1f},{derived}", flush=True)

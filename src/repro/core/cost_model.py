@@ -111,10 +111,18 @@ class CostModel:
         raise NotImplementedError
 
     def t_bwd(self, l: int, ctx: int) -> float:
-        """Backward-unit latency (the 1F1B executor pays one inside every
-        steady-state tick).  Default: the simulator's bwd ≈ 2·fwd
-        convention; models with real kernel knowledge override."""
+        """Backward-unit latency (the explicit-bwd 1F1B-family schedules
+        pay one inside every steady-state tick).  Default: the simulator's
+        bwd ≈ 2·fwd convention; models with real kernel knowledge
+        override."""
         return 2.0 * self.t_fwd(l, ctx)
+
+    def unit_cost(self, l: int, ctx: int, is_bwd: bool = False) -> float:
+        """Duration of one scheduled UNIT — the form the schedule-IR tick
+        tables distinguish (``is_bwd`` per unit) and the simulator's table
+        pricer consumes: fwd units cost :meth:`t_fwd`, explicit bwd units
+        :meth:`t_bwd`."""
+        return self.t_bwd(l, ctx) if is_bwd else self.t_fwd(l, ctx)
 
     def __call__(self, l: int, ctx: int) -> float:
         return self.t_fwd(l, ctx)
@@ -211,7 +219,7 @@ def measure_kernel_cost_table(pairs, *, batch: int = 1, n_heads: int = 8,
     Times ``repro.kernels.ops.terapipe_attention`` forward and its
     custom-vjp backward (the flash dQ/dK-dV kernels) on each ``(l, ctx)``
     pair and returns a :class:`TableCostModel` whose bwd entries come from
-    the kernel the 1F1B executor actually runs — the paper's live-cluster
+    the kernel the executor's bwd units actually run — the paper's live-cluster
     measurement loop (§4.1), pointed at the fused kernels.  Wall-clock of
     whatever backend is active (interpret mode on CPU containers: relative
     shape, not TPU-absolute).

@@ -181,13 +181,39 @@ def ensure_executable(slices: Sequence[int], *, schedule: str, n_ranks: int,
       microbatch must have the SAME slice count M (the bwd turnaround is a
       single M in the timing) — true by construction here, since one plan
       is replicated across microbatches.  Returned unchanged.
+    * ``interleaved-1f1b`` — both of the above: the interleaved group
+      structure needs ``(D·M) % K == 0`` (split the largest slices), and
+      the uniform slice count holds by construction.
     """
     out = list(slices)
-    if schedule == "interleaved" and (n_microbatches * len(out)) % n_ranks:
+    if (schedule in ("interleaved", "interleaved-1f1b")
+            and (n_microbatches * len(out)) % n_ranks):
         # D copies of the plan run; M only needs to clear K / gcd(D, K)
         need = n_ranks // np.gcd(n_microbatches, n_ranks)
         out = pad_slice_count(out, need, granularity=granularity)
     return out
+
+
+def plan_schedule_info(slices: Sequence[int], *, schedule: str, n_ranks: int,
+                       virtual_stages: int = 1,
+                       n_microbatches: int = 1) -> dict:
+    """What executing a planned slice list under ``schedule`` costs beyond
+    the Eq. 5 objective — read straight off the schedule IR the executor
+    interprets: the bubble weight the DP optimized against ((K-1)/V), and
+    the memory geometry (``peak_live_items`` — D·M·V for autodiff-backward
+    schedules, flat-in-D for the 1F1B family — plus the explicit-bwd
+    residual ring depth).  train's ``--dp-plan`` prints it so a plan's
+    memory consequence is visible next to its latency."""
+    from .schedules import get_schedule
+    assign = get_schedule(schedule, n_ranks=n_ranks, n_layers=1,
+                          virtual_stages=virtual_stages,
+                          n_microbatches=n_microbatches)
+    n_items = n_microbatches * len(slices)
+    info = {"bubble_weight": (n_ranks - 1) / virtual_stages,
+            "peak_live_items": assign.peak_live_items(n_items)}
+    if assign.has_backward:
+        info["residual_spread"] = assign.residual_spread(n_items)
+    return info
 
 
 def brute_force_slicing(t_fwd, L: int, K: int, *, granularity: int = 1

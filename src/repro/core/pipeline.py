@@ -2,89 +2,86 @@
 
 The paper's execution model (§3.2), adapted TPU-native (DESIGN.md §3):
 
-* The layer stack is partitioned into K cells; cell k lives on pipeline rank
-  k of the ``pipe`` mesh axis.
+* The layer stack is partitioned into K·V chunks; rank k of the ``pipe``
+  mesh axis holds chunks ``k, K+k, …`` (global stage ``s = v·K + k``).
 * A minibatch is cut into D microbatches × M token slices; work item
-  i = d·M + m enters stage 0 at tick i and flows down the pipe, one
-  ``collective-permute`` per tick.
+  i = d·M + m enters stage 0 at its scheduled tick and flows down the pipe,
+  one ``collective-permute`` per tick.
 * Each stage keeps a per-layer KV cache (or SSM/LRU state) of the prefix of
   the *current* microbatch it has already processed — the paper's attention
   context t_fwd(l, ctx).
 * Stages run in SPMD lockstep: a tick is one program region bounded by the
-  ppermute.
+  ppermute(s).
 
-Which units run when comes from the schedule IR
-(``core/schedules.StageAssignment``), selected by ``TeraPipeConfig.schedule``:
+ONE executor, schedule-driven
+-----------------------------
 
-* ``contiguous`` (V=1) — the paper's TeraPipe schedule.  The whole
-  (fwd ticks → loss → bwd ticks) program is a single differentiable
-  function; the reverse pipeline emerges from autodiff (the transpose of
-  ppermute is the reverse ppermute).  Every tick's saved residuals stay
-  live until the drain: peak activation memory grows with D·M.
-* ``interleaved`` (V≥2) — Megatron-style virtual pipeline: each rank holds V
-  round-robin layer chunks, the ppermute ring is traversed V times per work
-  item, and the fill/drain bubble shrinks by ~V.  Backward still via
-  whole-program autodiff (live memory O(D·M·V)).
-* ``1f1b`` — memory-bounded schedule (``schedules.OneFOneB``): the tick
-  table contains explicit BACKWARD units interleaved 1F1B-style with the
-  forwards.  The executor runs each bwd unit as a per-unit ``jax.vjp``
-  inside the tick (recompute-from-saved-inputs: stage-granular activation
-  checkpointing), accumulates grads in the scan carry, and keeps saved
-  inputs in a ring-buffered residual store of depth
-  ``O(min(D·M, K + M - 1))`` — peak live activations bounded by the
-  pipeline depth + per-microbatch turnaround instead of the work-item
-  count.  Cotangents flow down a second, REVERSE ppermute ring.  Built by
-  :func:`make_terapipe_value_and_grad` (the program computes loss AND
-  grads; it is not differentiated again).
+Which units run when — and how their inputs arrive — comes entirely from
+the schedule IR (``core/schedules``): the executor is a single rolled
+``lax.scan`` tick loop that INTERPRETS
+
+* the **tick table** ``(tick, rank) -> (work_item, chunk, is_bwd)`` — the
+  per-tick unit kind (idle / fwd / bwd) dispatches a ``lax.switch``; the
+  chunk index gathers the rank's per-chunk params/caches (shape-stable
+  ``dynamic_index_in_dim`` from the rank-major chunk stacks, so the body
+  traces ONCE regardless of D·M·V);
+* the **comm plan** (``StageAssignment.comm_plan``) — whether the reverse
+  cotangent ring fires, and the *skew hold* of each ring: wrap-around chunk
+  handoffs (global stage ``v·K+K-1 -> (v+1)·K``) ride their ring one hop
+  and then sit ``hold`` ticks in a destination-side skew ring buffer
+  (depth ``hold+1``, pushed every tick, read at slot ``(t - hold) mod
+  (hold+1)``) before their consumer tick;
+* the **residual geometry** (``residual_spread``) — explicit-bwd schedules
+  save each fwd unit's inputs in a ``(V, R)`` ring buffer (collision-free
+  by the IR audit) and retire them at the unit's bwd tick.
+
+Schedules select behavior through IR properties only — there is no
+per-schedule executor code.  The four registered schedules:
+
+* ``contiguous`` (V=1) — the paper's TeraPipe schedule; backward via
+  whole-program autodiff (live activations grow with D·M).
+* ``interleaved`` (V≥2) — Megatron virtual pipeline; fill/drain bubble ~V×
+  smaller; autodiff backward (live activations O(D·M·V)).
+* ``1f1b`` — explicit bwd units (``schedules.OneFOneB``): each bwd unit is
+  a per-unit ``jax.vjp`` rebuilt from the saved inputs (stage-granular
+  recompute), grads accumulate in the scan carry, cotangents ride a second
+  REVERSE ppermute ring; peak live activations ``min(D·M, K+M-1)``.
+* ``interleaved-1f1b`` (V≥2) — the 1F1B unit ordering over V chunks with
+  K-tick skew buffers on both rings' wrap edges: interleaving's smaller
+  bubble AND the flat-in-D memory bound.  Pure IR — the executor needed no
+  changes to run it.
+
+For fwd-only schedules the scan is a differentiable loss
+(:func:`make_terapipe_loss`, wrapped in ``jax.value_and_grad``); for
+explicit-bwd schedules the SAME tick interpreter computes loss AND grads in
+one program.  :func:`make_terapipe_value_and_grad` is the one entry point
+train/dryrun drive for every schedule.
 
 Within a stage, optional Megatron-style tensor parallelism over a ``tp``
 mesh axis: weights arrive head/ff/expert-sharded and the block fns psum
 partial outputs (see models/* with cfg.tp_axis).  (Not yet supported for
-``1f1b`` — the per-slice head loss and explicit grad psums need per-leaf
-tp-aware reductions.)
+explicit-bwd schedules — the per-slice head loss and explicit grad psums
+need per-leaf tp-aware reductions.)
 
 GPipe (the paper's baseline) is the D>1, M=1 special case.
 
-Executor design (rolled tick loop)
-----------------------------------
+Executor design notes (rolled tick loop)
+----------------------------------------
 
 The tick loop is ROLLED with ``jax.lax.scan`` over the tick index, so XLA
 traces and compiles ONE tick program regardless of the tick count — the
 large-M schemes the DP planner (§3.3) emits stay cheap to trace/compile.
+The tick's unit is gathered from the (host-precomputed) tick table with the
+traced tick index; all branches are shape-stable.
 
-* Carry layout (fwd-only schedules): ``(x_prev, caches, outbuf)`` —
-  - ``x_prev``  (mb, l, d)        activation received from the previous
-                                  stage at the end of the last tick;
-  - ``caches``  per-layer pytree  KV / SSM / LRU state of the current
-                                  microbatch prefix; stacked on bps for V=1,
-                                  on a per-chunk leading axis (V, bps, ...)
-                                  for V>1 (each chunk keeps its own prefix);
-  - ``outbuf``  (D*M+1, mb, l, d) per-work-item output ring written by the
-                                  last stage; row D*M is a dump row that
-                                  absorbs idle-tick writes (other stages
-                                  write garbage that reassembly never
-                                  reads; under interleaving a rank writes
-                                  each item V times, final chunk last).
-* The unit ``u = t - k_rank`` maps to ``(work_item, chunk, is_bwd)`` via
-  ``StageAssignment.unit_index`` (pure arithmetic on the traced tick index);
-  its ``(mb_idx, sl_idx, ctx)`` follow as before, with non-uniform slice
-  offsets from ``starts`` as a captured device array indexed with
-  ``jnp.take``.  For V>1 the chunk's params/caches are gathered per tick
-  with ``dynamic_index_in_dim`` from pipe-sharded rank-major chunk stacks —
-  the body stays shape-stable, so it still traces once.  The 1F1B table is
-  rank-dependent (fwd/bwd interleave by rank parity), so that executor
-  gathers per-tick ``(item, kind)`` from the precomputed table instead.
-* Cache mutation is gated on ``valid``: idle (fill/drain) ticks leave the
-  cache carry BIT-IDENTICAL.  (Before this gating, the ``fresh`` zeroing
-  and the V>1 chunk write-back also ran on idle ticks and were correct
-  only because clamped-invalid units aliased unit 0, whose cache was
-  already zero — a coincidence the 1F1B executor breaks: its bwd ticks
-  must never touch the forward cache.)
-* Double-buffered send/recv: the ``ppermute`` on ``x_out`` is issued as soon
-  as the stage output exists, BEFORE the outbuf write (and the cache
-  merge) — those consume the previous buffer generation, so XLA's async
-  collective-permute-start/-done pair overlaps the wire transfer with the
-  trailing per-tick bookkeeping.
+* Double-buffered send/recv: the ``ppermute`` on the outgoing value is
+  issued as soon as the stage output exists, BEFORE the outbuf write (and
+  the cache merge) — those consume the previous buffer generation, so XLA's
+  async collective-permute-start/-done pair overlaps the wire transfer with
+  the trailing per-tick bookkeeping.
+* Cache mutation is gated on the unit kind: idle (fill/drain) ticks leave
+  the cache carry BIT-IDENTICAL, and bwd ticks never touch the forward
+  cache (they thread a separate per-chunk cotangent cache).
 * Requirement on block fns: shape-stable across ticks (every slice runs in
   an ``l_max``-padded buffer; ``ctx`` is traced, so attention uses the
   ``sliced_dyn`` dynamic-slice path).
@@ -104,8 +101,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
-from repro.core.schedules import (OneFOneB, StageAssignment,
-                                  interleave_stacked)
+from repro.core.schedules import (REGISTRY, get_schedule, interleave_stacked,
+                                  schedule_names, uninterleave_stacked)
 from repro.models import Model, build_model
 from repro.models.common import ModelConfig, rms_norm
 from repro.models.lm import _scan_full
@@ -113,7 +110,8 @@ from repro.models.lm import _scan_full
 # logical axis -> pipeline mesh axis mapping for TP-sharded stage weights
 _TP_LOGICAL = ("heads", "ff", "experts")
 
-SCHEDULES = ("contiguous", "interleaved", "1f1b")
+#: registered schedule names (core/schedules registry) — the CLI choices
+SCHEDULES = schedule_names()
 
 
 @dataclasses.dataclass
@@ -131,8 +129,9 @@ class TeraPipeConfig:
     data_axes: Tuple[str, ...] = ("data",)
     cache_dtype: Any = jnp.bfloat16
     # bubble ticks (stage idle in the fill/drain phases) skip the stage
-    # compute via lax.cond — at runtime an idle device runs the cheap branch
-    # instead of masked garbage compute.  Disable only for debugging.
+    # compute via the unit-kind switch — at runtime an idle device runs the
+    # cheap branch instead of masked garbage compute.  False (debugging,
+    # fwd-only schedules only) computes every tick and masks the merge.
     skip_bubbles: bool = True
     # Python-unroll the tick loop (one jaxpr copy per tick) instead of the
     # rolled lax.scan executor.  Trace/compile cost grows with the tick
@@ -140,13 +139,12 @@ class TeraPipeConfig:
     unroll: bool = False
     # V: virtual pipeline stages (Megatron-LM interleaving, via the schedule
     # IR in core/schedules).  Each rank holds V non-contiguous layer chunks
-    # (round-robin over the K*V global stages) and the ppermute ring is
-    # traversed V times per work item, shrinking the fill/drain bubble by ~V
-    # at the cost of V ring hops per item.  V=1 is the paper's contiguous
-    # schedule; V>1 requires D*M divisible by the pipe degree K.
+    # (round-robin over the K*V global stages); V>1 requires D*M divisible
+    # by the pipe degree K (work items advance in ring groups of K).
     virtual_stages: int = 1
-    # which schedule table drives the tick loop; "contiguous" with
-    # virtual_stages>1 is promoted to "interleaved" for back-compat
+    # which schedule table drives the tick loop (core/schedules registry);
+    # "contiguous" with virtual_stages>1 is promoted to "interleaved" for
+    # back-compat
     schedule: str = "contiguous"
     # debug: extra all-idle ticks appended to the tick loop.  With correctly
     # gated cache mutation they are exact no-ops (tests assert bit-identical
@@ -155,9 +153,10 @@ class TeraPipeConfig:
     # route stage attention through the Pallas flash kernels (fused fwd+bwd,
     # traced-ctx scalar prefetch — see repro.kernels).  None defers to the
     # ModelConfig's own ``use_kernel``; True/False overrides it for the
-    # stage-local model BOTH executors run (the fwd-only scan differentiates
-    # through the kernel's custom_vjp; the 1F1B executor's per-unit jax.vjp
-    # hits the fused backward kernels inside every steady-state tick).
+    # stage-local model the executor runs (fwd-only schedules differentiate
+    # through the kernel's custom_vjp; explicit-bwd schedules' per-unit
+    # jax.vjp hits the fused backward kernels inside every steady-state
+    # tick).
     use_kernel: Optional[bool] = None
 
 
@@ -199,7 +198,7 @@ def _leaf_pspec(spec: Tuple, tp_axis, tp_size: int, pipe_axis, cfg: ModelConfig)
 
 
 class _Plan:
-    """Everything both executors derive from (model, mesh, tcfg, shapes):
+    """Everything the executor derives from (model, mesh, tcfg, shapes):
     slice geometry, schedule assignment, local model, param specs."""
 
     def __init__(self, model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
@@ -219,12 +218,6 @@ class _Plan:
         V = tcfg.virtual_stages
         if sched == "contiguous" and V > 1:
             sched = "interleaved"    # back-compat: V>1 implies interleaving
-        assert sched in SCHEDULES, (sched, SCHEDULES)
-        if sched == "interleaved":
-            assert V >= 2, (
-                f"schedule='interleaved' needs virtual_stages >= 2, got {V}")
-        if sched == "1f1b":
-            assert V == 1, "1F1B is a V=1 schedule (see schedules.OneFOneB)"
         self.sched, self.V = sched, V
 
         if tcfg.slice_lens is not None:
@@ -255,12 +248,10 @@ class _Plan:
 
         self.pre, self.main, self.post = _group_split(model)
         n_main = self.main.count
-        if sched == "1f1b":
-            self.assign = OneFOneB(n_ranks=K, virtual_stages=1,
-                                   n_layers=n_main, n_microbatches=D)
-        else:
-            self.assign = StageAssignment(n_ranks=K, virtual_stages=V,
-                                          n_layers=n_main)
+        # the registry validates the (schedule, V) combination and builds
+        # the IR value the executor interprets
+        self.assign = get_schedule(sched, n_ranks=K, n_layers=n_main,
+                                   virtual_stages=V, n_microbatches=D)
         self.bps = self.assign.blocks_per_chunk
         self.n_pad = self.assign.n_pad
         self.n_main = n_main
@@ -306,8 +297,8 @@ class _Plan:
         """Shared pre-pipeline prologue: embed -> pre groups -> activation
         dtype -> (non-uniform) seq pad so a short slice's l_max-window never
         clamps (dynamic_slice clamps OOB starts, which would alias real
-        data).  Pure in (params, batch) — the 1F1B executor differentiates
-        it with jax.vjp for the embedding/pre-group grads."""
+        data).  Pure in (params, batch) — the explicit-bwd path
+        differentiates it with jax.vjp for the embedding/pre-group grads."""
         x = self.model.embed(params, batch, 0)
         for g in self.pre:
             x = _scan_full(g, params["groups"][g.name], x, self.cfg.remat)
@@ -395,117 +386,311 @@ class _Plan:
 
 
 # ---------------------------------------------------------------------------
-# forward-only executor (contiguous / interleaved; bwd via autodiff)
+# THE executor: one rolled tick loop interpreting the schedule IR
 # ---------------------------------------------------------------------------
-def _make_forward_pipeline(p: _Plan):
-    """Per-device pipeline body for the fwd-only schedules.  Returns
-    (outbuf, final_caches); wrappers select which output crosses the
-    shard_map boundary."""
+def _make_pipeline_body(p: _Plan):
+    """Build the per-device scan program interpreting ``p.assign``.
+
+    Returns ``pipeline_body`` whose signature follows the schedule class:
+
+    * fwd-only tables: ``(stage_params, x_emb) -> (outbuf, final_caches)``
+      — a differentiable forward; the loss wrapper reassembles the last
+      rank's outputs and autodiff provides the backward.
+    * explicit-bwd tables: ``(stage_params, head_p, x_emb, labels) ->
+      (loss, d_stage, d_ln, d_wh, d_emb)`` — loss AND grads in one program
+      (per-unit vjp at bwd ticks; never differentiated again).
+
+    Everything else — unit decode, chunk gather, comm (rings + skew
+    buffers), cache freshness, residual save/retire — is one code path
+    driven by the tick table and comm plan.
+    """
     tcfg, cfg = p.tcfg, p.cfg
+    assign = p.assign
     K, V, M, l, DM = p.K, p.V, p.M, p.l, p.DM
     mb_local, d_model = p.mb_local, p.d_model
-    assign, bps = p.assign, p.bps
-    n_units = assign.n_units(DM)
-    ticks = assign.n_ticks(DM) + tcfg.extra_ticks
-    starts_arr_host = p.starts
-    uniform_slices = p.uniform
+    bps = p.bps
+    has_bwd = assign.has_backward
+    plan = assign.comm_plan()
 
-    def pipeline_body(stage_params, x_emb):
+    tab = assign.tick_table(DM)                      # (T, K, 3), host-side
+    if tcfg.extra_ticks:                             # debug: trailing idles
+        pad = np.full((tcfg.extra_ticks, K, 3), -1, tab.dtype)
+        tab = np.concatenate([tab, pad])
+    ticks = tab.shape[0]
+    items_np, chunk_np, bwd_np = tab[..., 0], tab[..., 1], tab[..., 2]
+    # per-(tick, rank) switch branch: 0 = idle, 1 = fwd, 2 = bwd
+    kind_np = np.where(items_np < 0, 0, 1 + np.maximum(bwd_np, 0))
+    chunk_np = np.clip(chunk_np, 0, V - 1)
+    R = assign.residual_spread(DM) if has_bwd else 0
+    Hx, Hg = plan.fwd_hold + 1, plan.rev_hold + 1    # skew buffer depths
+    starts_host, lens_host = p.starts, list(p.slice_lens)
+    uniform = p.uniform
+    inv_total = 1.0 / float(p.B * p.L)
+    fwd_perm = [(j, (j + 1) % K) for j in range(K)]
+    rev_perm = [(j, (j - 1) % K) for j in range(K)]
+
+    def slice_loss(x_out, head_p, labels_sl, mask):
+        """Per-slice LM loss contribution, pre-normalized by the GLOBAL
+        token count (so the accumulated sum is the mean loss and a unit
+        seed yields correctly scaled grads).  Matches models.lm math:
+        rms_norm -> head matmul in activation dtype -> f32 xent."""
+        final_ln, w_head = head_p
+        h = rms_norm(x_out, final_ln)
+        logits = (h @ w_head.astype(h.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels_sl[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mask) * inv_total
+
+    def pipeline_body(stage_params, x_emb, head_p=None, labels=None):
         k_rank = jax.lax.axis_index(tcfg.pipe_axis)
-        starts_arr = jnp.asarray(starts_arr_host, jnp.int32)
-        # per-layer cache struct (from the local model), re-led with bps
-        # (and, for V>1, a per-chunk leading axis: each of the rank's V
-        # chunks keeps its own microbatch-prefix state)
-        caches = p.init_stage_caches((V, bps) if V > 1 else (bps,))
-        if V > 1:
-            # the local stack arrives rank-major chunk order (see loss_fn):
-            # (V*bps, ...) -> (V, bps, ...) so a tick can gather its chunk
-            stage_params_c = jax.tree.map(
-                lambda a: a.reshape((V, bps) + a.shape[1:]), stage_params)
-        else:
-            stage_params_c = stage_params
+        starts_arr = jnp.asarray(starts_host, jnp.int32)
+        lens_arr = jnp.asarray(lens_host, jnp.int32)
+        items_tab = jnp.asarray(items_np, jnp.int32)
+        chunk_tab = jnp.asarray(chunk_np, jnp.int32)
+        kind_tab = jnp.asarray(kind_np, jnp.int32)
+        # the local stack arrives rank-major chunk order: (V*bps, ...) ->
+        # (V, bps, ...) so a tick can gather its chunk shape-stably
+        stage_params_c = jax.tree.map(
+            lambda a: a.reshape((V, bps) + a.shape[1:]), stage_params)
+        caches0 = p.init_stage_caches((V, bps))
+
+        def read_tab(table, t):
+            row = jax.lax.dynamic_index_in_dim(table, t, 0, keepdims=False)
+            return jax.lax.dynamic_index_in_dim(row, k_rank, 0,
+                                                keepdims=False)
+
+        def chunk_of(tree, v_idx):
+            # V == 1: the chunk index is the host constant 0 — a static
+            # squeeze instead of a traced gather keeps the V=1 schedules'
+            # trace cost at the pre-chunk-machinery level
+            if V == 1:
+                return jax.tree.map(lambda a: a[0], tree)
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, v_idx, 0,
+                                                       keepdims=False), tree)
+
+        def put_chunk(tree, sub, v_idx):
+            if V == 1:
+                return jax.tree.map(lambda a, c: c[None], tree, sub)
+            return jax.tree.map(
+                lambda a, c: jax.lax.dynamic_update_index_in_dim(a, c, v_idx,
+                                                                 0),
+                tree, sub)
+
+        def tree_where(pred, a, b):
+            return jax.tree.map(
+                lambda x, y: jnp.where(jnp.reshape(pred, (1,) * x.ndim), x,
+                                       y), a, b)
 
         def tick(carry, t):
-            """One pipeline tick.  ``t`` is traced — the body is shape-stable
-            in the tick index, so it traces ONCE under the rolled executor."""
-            x_prev, caches, outbuf = carry
-            u = t - k_rank                             # per-rank unit id
-            valid = (u >= 0) & (u < n_units)
-            u_c = jnp.clip(u, 0, n_units - 1)
-            i_c, v_idx, _ = assign.unit_index(u_c)     # (work item, chunk)
+            """One pipeline tick.  ``t`` is traced — the body is shape-
+            stable in the tick index, so it traces ONCE under the rolled
+            executor; the unit comes from the gathered tick table."""
+            i_raw = read_tab(items_tab, t)
+            # V == 1 schedules have exactly one chunk: pin the index to the
+            # literal 0 so every chunk-indexed op below folds to a static
+            # slice/update (no traced-gather overhead on the V=1 hot path)
+            v_idx = read_tab(chunk_tab, t) if V > 1 else 0
+            kind = read_tab(kind_tab, t)
+            i_c = jnp.clip(i_raw, 0, DM - 1)
             mb_idx, sl_idx = i_c // M, i_c % M
-            ctx = jnp.take(starts_arr, sl_idx) if not uniform_slices \
+            ctx = jnp.take(starts_arr, sl_idx) if not uniform \
                 else sl_idx * l
+            # comm bookkeeping first: every received ring value lands in the
+            # skew buffers (slot t mod H), idle ticks included — wrap
+            # handoffs are read back ``hold`` ticks later
+            if plan.fwd_hold:
+                carry = dict(carry, xskew=jax.lax.dynamic_update_index_in_dim(
+                    carry["xskew"], carry["x"], t % Hx, 0))
+            if has_bwd and plan.rev_hold:
+                carry = dict(carry, gskew=jax.lax.dynamic_update_index_in_dim(
+                    carry["gskew"], carry["g"], t % Hg, 0))
+            # forward input: rank 0 chunk 0 admits new work; rank 0 chunk
+            # v>0 consumes the wrap-around handoff (skew-held when the comm
+            # plan says so); everyone else reads the ring fresh
             x0 = jax.lax.dynamic_slice(
                 x_emb, (mb_idx * mb_local, ctx, 0), (mb_local, l, d_model))
-            if V == 1:
-                x_in = jnp.where(k_rank == 0, x0, x_prev)
-                params_c, caches_c = stage_params_c, caches
+            if plan.fwd_hold:
+                x_wrap = jax.lax.dynamic_index_in_dim(
+                    carry["xskew"], (t - plan.fwd_hold) % Hx, 0,
+                    keepdims=False)
+                x_ring = jnp.where(k_rank == 0, x_wrap, carry["x"])
             else:
-                # chunk 0 of rank 0 admits new work; every other (rank,
-                # chunk) consumes the ring — rank 0 chunk v>0 receives the
-                # chunk v-1 -> v handoff on the (K-1, 0) wrap-around edge
-                x_in = jnp.where((k_rank == 0) & (v_idx == 0), x0, x_prev)
-                params_c = jax.tree.map(
-                    lambda a: jax.lax.dynamic_index_in_dim(
-                        a, v_idx, 0, keepdims=False), stage_params_c)
-                caches_c = jax.tree.map(
-                    lambda a: jax.lax.dynamic_index_in_dim(
-                        a, v_idx, 0, keepdims=False), caches)
-            # new microbatch => fresh prefix: zero the caches.  Required for
-            # state-based families (SSM/LRU carry real state); harmless and
-            # exact for KV caches (masked by absolute positions anyway).
-            # GATED ON ``valid``: an idle tick must not mutate cache state
-            # (see module docstring — the 1F1B executor relies on this).
-            fresh = (sl_idx == 0) & valid
-            caches_c = jax.tree.map(
-                lambda c: jnp.where(jnp.reshape(fresh, (1,) * c.ndim),
-                                    jnp.zeros_like(c), c), caches_c)
-            if tcfg.skip_bubbles:
-                # idle (fill/drain) ticks take the cheap branch at runtime
-                x_out, caches_c = jax.lax.cond(
-                    valid,
-                    lambda xi, cs: p.stage_apply(params_c, xi, cs, ctx),
-                    lambda xi, cs: (xi, cs),
-                    x_in, caches_c)
-            else:
-                x_out, caches_new = p.stage_apply(params_c, x_in, caches_c,
-                                                  ctx)
-                caches_c = jax.tree.map(
-                    lambda new, old: jnp.where(
-                        jnp.reshape(valid, (1,) * new.ndim), new, old),
-                    caches_new, caches_c)
-            # double buffer: issue the send/recv on x_out FIRST — the writes
-            # below only read x_out / caches_c, so the async collective-
-            # permute overlaps the trailing per-tick bookkeeping
-            x_next = jax.lax.ppermute(
-                x_out, tcfg.pipe_axis, [(j, (j + 1) % K) for j in range(K)])
-            if V == 1:
-                caches = caches_c
-            else:
-                caches = jax.tree.map(
-                    lambda cs, c: jax.lax.dynamic_update_index_in_dim(
-                        cs, c, v_idx, 0), caches, caches_c)
-            # always-write, with idle ticks routed to the dump row DM: only
-            # the last stage's rows 0..DM-1 are read, and for them every
-            # valid item overwrites any earlier garbage (under interleaving,
-            # writes for an item ascend in chunk order, so the final chunk
-            # V-1 lands last)
-            row = jnp.where(valid, i_c, DM)
-            outbuf = jax.lax.dynamic_update_slice(
-                outbuf, x_out[None], (row, 0, 0, 0))
-            return (x_next, caches, outbuf), None
+                x_ring = carry["x"]
+            x_in = jnp.where((k_rank == 0) & (v_idx == 0), x0, x_ring)
+            params_c = chunk_of(stage_params_c, v_idx)
+            caches_c = chunk_of(carry["caches"], v_idx)
+            # new microbatch => fresh prefix: zero the chunk's caches.
+            # Required for state-based families (SSM/LRU carry real state);
+            # harmless and exact for KV caches (masked by absolute
+            # positions anyway).  Only applied inside the fwd branch — idle
+            # and bwd ticks must not mutate cache state.
+            fresh = sl_idx == 0
+            caches_in = tree_where(fresh,
+                                   jax.tree.map(jnp.zeros_like, caches_c),
+                                   caches_c)
 
-        carry = (jnp.zeros((mb_local, l, d_model), cfg.dtype),   # x_prev
-                 caches,
-                 jnp.zeros((DM + 1, mb_local, l, d_model), cfg.dtype))
+            def idle_branch(c):
+                return c
+
+            def fwd_branch(c):
+                x_out, caches_out = p.stage_apply(params_c, x_in, caches_in,
+                                                  ctx)
+                c = dict(c, x=x_out,
+                         caches=put_chunk(c["caches"], caches_out, v_idx))
+                if has_bwd:
+                    # save the unit's inputs for its bwd tick's recompute
+                    slot = i_c % R
+                    c = dict(
+                        c,
+                        rx=jax.lax.dynamic_update_slice(
+                            c["rx"], x_in[None, None],
+                            (v_idx, slot, 0, 0, 0)),
+                        rc=jax.tree.map(
+                            lambda buf, cc: jax.lax.dynamic_update_slice(
+                                buf, cc[None, None],
+                                (v_idx, slot) + (0,) * cc.ndim),
+                            c["rc"], caches_in))
+                return c
+
+            if has_bwd:
+                labels_sl = jax.lax.dynamic_slice(
+                    labels, (mb_idx * mb_local, ctx), (mb_local, l))
+                mask = (jnp.arange(l) < jnp.take(lens_arr, sl_idx))[None, :]
+                is_last = (k_rank == K - 1) & (v_idx == V - 1)
+                if plan.rev_hold:
+                    g_wrap = jax.lax.dynamic_index_in_dim(
+                        carry["gskew"], (t - plan.rev_hold) % Hg, 0,
+                        keepdims=False)
+                    g_ring = jnp.where(k_rank == K - 1, g_wrap, carry["g"])
+                else:
+                    g_ring = carry["g"]
+                # the last global stage seeds from its own loss, not the ring
+                g_cot = jnp.where(is_last, jnp.zeros_like(g_ring), g_ring)
+
+                def bwd_branch(c):
+                    slot = i_c % R
+                    x_saved = jax.lax.dynamic_slice(
+                        c["rx"], (v_idx, slot, 0, 0, 0),
+                        (1, 1, mb_local, l, d_model))[0, 0]
+                    c_saved = jax.tree.map(
+                        lambda buf: jax.lax.dynamic_slice(
+                            buf, (v_idx, slot) + (0,) * (buf.ndim - 2),
+                            (1, 1) + buf.shape[2:])[0, 0], c["rc"])
+
+                    def unit(sp, xi, ci, hp):
+                        xo, co = p.stage_apply(sp, xi, ci, ctx)
+                        return xo, co, slice_loss(xo, hp, labels_sl, mask)
+
+                    (_, _, ls), vjp = jax.vjp(unit, params_c, x_saved,
+                                              c_saved, head_p)
+                    # first bwd of a microbatch at this chunk (slice M-1):
+                    # no downstream-slice cache cotangent accumulated yet
+                    first_bwd = sl_idx == M - 1
+                    gcache_c = chunk_of(c["gcache"], v_idx)
+                    gcache_in = tree_where(
+                        first_bwd, jax.tree.map(jnp.zeros_like, gcache_c),
+                        gcache_c)
+                    seed = jnp.where(is_last, jnp.float32(1), jnp.float32(0))
+                    d_sp, d_x_in, d_c_in, d_hp = vjp((g_cot, gcache_in, seed))
+                    d_stage2 = jax.tree.map(
+                        lambda acc, g: acc.at[v_idx].add(g),
+                        c["d_stage"], d_sp)
+                    # embedding cotangent: only rank 0 chunk 0's d(x_in)
+                    # belongs to x_emb (everyone else's went down the ring)
+                    add = jnp.where((k_rank == 0) & (v_idx == 0), d_x_in,
+                                    jnp.zeros_like(d_x_in))
+                    seg = jax.lax.dynamic_slice(
+                        c["d_emb"], (mb_idx * mb_local, ctx, 0),
+                        (mb_local, l, d_model))
+                    d_emb2 = jax.lax.dynamic_update_slice(
+                        c["d_emb"], seg + add, (mb_idx * mb_local, ctx, 0))
+                    return dict(
+                        c, g=d_x_in,
+                        gcache=put_chunk(c["gcache"], d_c_in, v_idx),
+                        d_stage=d_stage2,
+                        d_ln=c["d_ln"] + d_hp[0], d_wh=c["d_wh"] + d_hp[1],
+                        d_emb=d_emb2,
+                        loss=c["loss"] + jnp.where(is_last, ls,
+                                                   jnp.float32(0)))
+
+                out = jax.lax.switch(kind, (idle_branch, fwd_branch,
+                                            bwd_branch), carry)
+            elif tcfg.skip_bubbles:
+                out = jax.lax.switch(kind, (idle_branch, fwd_branch), carry)
+            else:
+                # debug: compute every tick, mask the merge (fwd-only)
+                computed = fwd_branch(carry)
+                out = tree_where(kind > 0, computed, carry)
+            # activations ride the forward ring (issued BEFORE the trailing
+            # bookkeeping below so the async collective overlaps it);
+            # cotangents ride the reverse ring.  Consumers read a ring value
+            # only on the tick the schedule delivers it (validate()), so
+            # off-kind sends are inert.
+            x_send = out["x"]
+            x_next = jax.lax.ppermute(x_send, tcfg.pipe_axis, fwd_perm)
+            out = dict(out, x=x_next)
+            if has_bwd:
+                out = dict(out, g=jax.lax.ppermute(out["g"], tcfg.pipe_axis,
+                                                   rev_perm))
+            else:
+                # per-work-item output ring written by every rank; only the
+                # last rank's rows are read.  Idle ticks land in the dump
+                # row DM; under interleaving an item's writes ascend in
+                # chunk order, so the final chunk V-1 lands last.
+                row = jnp.where(kind > 0, i_c, DM)
+                out = dict(out, out=jax.lax.dynamic_update_slice(
+                    out["out"], x_send[None], (row, 0, 0, 0)))
+            return out, None
+
+        carry = {
+            "x": jnp.zeros((mb_local, l, d_model), cfg.dtype),
+            "caches": caches0,
+        }
+        if plan.fwd_hold:
+            carry["xskew"] = jnp.zeros((Hx, mb_local, l, d_model), cfg.dtype)
+        if has_bwd:
+            carry["g"] = jnp.zeros((mb_local, l, d_model), cfg.dtype)
+            if plan.rev_hold:
+                carry["gskew"] = jnp.zeros((Hg, mb_local, l, d_model),
+                                           cfg.dtype)
+            carry["gcache"] = jax.tree.map(jnp.zeros_like, caches0)
+            carry["rx"] = jnp.zeros((V, R, mb_local, l, d_model), cfg.dtype)
+            carry["rc"] = jax.tree.map(
+                lambda a: jnp.zeros((V, R) + a.shape[1:], a.dtype), caches0)
+            carry["d_stage"] = jax.tree.map(jnp.zeros_like, stage_params_c)
+            carry["d_ln"] = jnp.zeros_like(head_p[0])
+            carry["d_wh"] = jnp.zeros_like(head_p[1])
+            carry["d_emb"] = jnp.zeros_like(x_emb)
+            carry["loss"] = jnp.float32(0)
+        else:
+            carry["out"] = jnp.zeros((DM + 1, mb_local, l, d_model),
+                                     cfg.dtype)
+
         if tcfg.unroll:
             for t in range(ticks):              # escape hatch: jaxpr O(ticks)
                 carry, _ = tick(carry, jnp.int32(t))
         else:
             carry, _ = jax.lax.scan(tick, carry,
                                     jnp.arange(ticks, dtype=jnp.int32))
-        return carry[2], carry[1]
+
+        if not has_bwd:
+            # caches leave the body as rank-major chunk rows (V*bps, ...) —
+            # the same leading layout as the local stage-param stack
+            final_caches = jax.tree.map(
+                lambda a: a.reshape((V * bps,) + a.shape[2:]),
+                carry["caches"])
+            return carry["out"], final_caches
+        axes_all = (tcfg.pipe_axis,) + tuple(tcfg.data_axes)
+        loss = jax.lax.psum(carry["loss"], axes_all)
+        d_ln = jax.lax.psum(carry["d_ln"], axes_all)
+        d_wh = jax.lax.psum(carry["d_wh"], axes_all)
+        d_emb = jax.lax.psum(carry["d_emb"], tcfg.pipe_axis)  # rank0 nonzero
+        d_stage = jax.tree.map(
+            lambda a: jax.lax.psum(a.reshape((V * bps,) + a.shape[2:]),
+                                   tuple(tcfg.data_axes)), carry["d_stage"])
+        return loss, d_stage, d_ln, d_wh, d_emb
 
     return pipeline_body
 
@@ -515,22 +700,30 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
     """Returns loss_fn(params, batch) implementing the pipelined step, plus
     the param sharding tree (NamedShardings) for jit in_shardings.
 
-    Forward-only schedules (contiguous / interleaved): differentiate the
-    returned loss with ``jax.value_and_grad`` as usual.  For the 1F1B
-    schedule use :func:`make_terapipe_value_and_grad` — its backward pass is
-    explicit in the tick table, not an autodiff transpose of this function.
-    """
+    Forward-only schedules only (contiguous / interleaved): differentiate
+    the returned loss with ``jax.value_and_grad`` as usual.  Explicit-bwd
+    schedules compute loss AND grads in one program — use
+    :func:`make_terapipe_value_and_grad` (the entry point that serves every
+    schedule)."""
     p = _Plan(model, specs, mesh, tcfg, seq_len, global_batch)
-    assert p.sched != "1f1b", (
-        "schedule='1f1b' computes loss AND grads in one pipelined program; "
-        "build it with make_terapipe_value_and_grad")
+    return _make_loss_from_plan(p), p.param_shardings_fn()
+
+
+def _make_loss_from_plan(p: _Plan):
+    """Differentiable loss wrapper over the tick interpreter (fwd-only
+    schedules): reassemble the last rank's per-item outputs, run the
+    post-pipeline groups + head under plain GSPMD."""
+    model, tcfg, mesh = p.model, p.tcfg, p.mesh
+    assert not p.assign.has_backward, (
+        f"schedule={p.sched!r} computes loss AND grads in one pipelined "
+        f"program; build it with make_terapipe_value_and_grad")
     cfg = p.cfg
     K, D, M, l, DM = p.K, p.D, p.M, p.l, p.DM
     data, mb_local, d_model = p.data, p.mb_local, p.d_model
     L, B, slice_lens = p.L, p.B, p.slice_lens
     main, post = p.main, p.post
 
-    pipeline_body = _make_forward_pipeline(p)
+    pipeline_body = _make_pipeline_body(p)
     out_specs = P(tcfg.pipe_axis, tcfg.data_axes, None, None)
     shmap = compat_shard_map(
         lambda sp, x: pipeline_body(sp, x)[0], mesh=mesh,
@@ -568,7 +761,7 @@ def make_terapipe_loss(model: Model, specs, mesh: Mesh, tcfg: TeraPipeConfig,
                                  cfg.remat)
         return model.head_loss(params, x_final, batch["labels"])
 
-    return loss_fn, p.param_shardings_fn()
+    return loss_fn
 
 
 def make_terapipe_caches_fn(model: Model, specs, mesh: Mesh,
@@ -576,15 +769,16 @@ def make_terapipe_caches_fn(model: Model, specs, mesh: Mesh,
                             global_batch: int):
     """Debug/testing: a function (params, batch) -> final per-rank cache
     pytree of the SAME tick loop make_terapipe_loss runs (leaves stacked
-    rank-major along axis 0 across the pipe axis).  Used by the idle-tick
-    no-op audits: with ``tcfg.extra_ticks`` appended, the result must be
-    bit-identical."""
+    rank-major along axis 0 across the pipe axis, chunk rows V*bps per
+    rank).  Used by the idle-tick no-op audits: with
+    ``tcfg.extra_ticks`` appended, the result must be bit-identical."""
     p = _Plan(model, specs, mesh, tcfg, seq_len, global_batch)
-    assert p.sched != "1f1b", "fwd-only executors expose the cache carry"
+    assert not p.assign.has_backward, \
+        "fwd-only schedules expose the cache carry"
     main = p.main
-    pipeline_body = _make_forward_pipeline(p)
-    lead = (p.V, p.bps) if p.V > 1 else (p.bps,)
-    cache_struct = jax.eval_shape(lambda: p.init_stage_caches(lead))
+    pipeline_body = _make_pipeline_body(p)
+    cache_struct = jax.eval_shape(
+        lambda: p.init_stage_caches((p.V * p.bps,)))
     cache_out_specs = jax.tree.map(
         lambda a: P(*((tcfg.pipe_axis,) + (None,) * (a.ndim - 1))),
         cache_struct)
@@ -600,225 +794,54 @@ def make_terapipe_caches_fn(model: Model, specs, mesh: Mesh,
     return caches_fn
 
 
-# ---------------------------------------------------------------------------
-# 1F1B executor (explicit bwd units; per-unit vjp; grads in the carry)
-# ---------------------------------------------------------------------------
-def _make_one_f_one_b_vg(p: _Plan):
-    """(params, batch) -> (loss, grads) for the 1F1B schedule.
-
-    The tick table (schedules.OneFOneB) interleaves fwd and bwd units; the
-    scan body dispatches on the per-(tick, rank) unit kind with lax.switch:
-
-    * fwd unit: run the stage, update the live cache, save (x_in, cache_in)
-      into the residual ring buffer (depth = assign.residual_spread — flat
-      in D);
-    * bwd unit: rebuild the unit's vjp from the saved inputs (stage-granular
-      recompute) and apply it to (cotangent from the reverse ring | the
-      per-slice loss seed at the last stage, accumulated cache cotangent),
-      accumulating param grads, the embedding cotangent (rank 0) and the
-      head grads (rank K-1) in the carry;
-    * idle: exact no-op.
-
-    Two ppermutes per tick: activations down (k -> k+1), cotangents down the
-    reverse ring (k -> k-1).  The per-microbatch cache cotangent is a single
-    threaded buffer — bwd units of one microbatch run slice-descending and
-    back-to-back at a rank (audited by OneFOneB.validate), so unit m+1's
-    d(cache_in) is exactly unit m's d(cache_out).
-    """
-    model, cfg, mesh, tcfg = p.model, p.cfg, p.mesh, p.tcfg
-    K, D, M, l, DM = p.K, p.D, p.M, p.l, p.DM
-    mb_local, d_model = p.mb_local, p.d_model
-    L, B = p.L, p.B
-    assign = p.assign
+def _make_explicit_value_and_grad(p: _Plan):
+    """(params, batch) -> (loss, grads) wrapper for explicit-bwd schedules:
+    shard_maps the tick interpreter's loss+grad program, differentiates the
+    embed/pre-group prologue with an outer jax.vjp, and maps the rank-major
+    stage grads back to layer order."""
+    tcfg = p.tcfg
     main = p.main
+    tied = p.cfg.tie_embeddings
     assert p.tp == 1, (
-        "schedule='1f1b' does not yet support TP inside a stage (per-slice "
-        "head loss and explicit grad psums need tp-aware reductions)")
-    assert not p.post, "1F1B needs the head/loss at the last stage; " \
-        "post-pipeline groups are not token-local"
-    assert cfg.family in ("dense", "moe"), (
-        f"schedule='1f1b' supports dense/moe families (per-slice LM loss at "
-        f"the last stage); got {cfg.family}")
+        f"schedule={p.sched!r} does not yet support TP inside a stage "
+        f"(per-slice head loss and explicit grad psums need tp-aware "
+        f"reductions)")
+    assert not p.post, "explicit-bwd schedules need the head/loss at the " \
+        "last stage; post-pipeline groups are not token-local"
+    assert p.cfg.family in ("dense", "moe"), (
+        f"schedule={p.sched!r} supports dense/moe families (per-slice LM "
+        f"loss at the last stage); got {p.cfg.family}")
 
-    tab = assign.tick_table(DM)                      # (T, K, 3), host-side
-    ticks = tab.shape[0] + tcfg.extra_ticks
-    items_np, bwd_np = tab[..., 0], tab[..., 2]
-    if tcfg.extra_ticks:                             # debug: trailing idles
-        pad = np.full((tcfg.extra_ticks, K), -1, tab.dtype)
-        items_np = np.concatenate([items_np, pad])
-        bwd_np = np.concatenate([bwd_np, pad])
-    # per-(tick, rank) switch branch: 0 = idle, 1 = fwd, 2 = bwd
-    kind_np = np.where(items_np < 0, 0, 1 + np.maximum(bwd_np, 0))
-    R = assign.residual_spread(DM)                   # residual ring depth
-    starts_host, lens_host = p.starts, list(p.slice_lens)
-    tied = cfg.tie_embeddings
-    inv_total = 1.0 / float(B * L)
-    fwd_perm = [(j, (j + 1) % K) for j in range(K)]
-    rev_perm = [(j, (j - 1) % K) for j in range(K)]
-
-    def slice_loss(x_out, head_p, labels_sl, mask):
-        """Per-slice LM loss contribution, pre-normalized by the GLOBAL
-        token count (so the accumulated sum is the mean loss and a unit
-        seed yields correctly scaled grads).  Matches models.lm math:
-        rms_norm -> head matmul in activation dtype -> f32 xent."""
-        final_ln, w_head = head_p
-        h = rms_norm(x_out, final_ln)
-        logits = (h @ w_head.astype(h.dtype)).astype(jnp.float32)
-        logz = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, labels_sl[..., None],
-                                   axis=-1)[..., 0]
-        return jnp.sum((logz - gold) * mask) * inv_total
-
-    def pipeline_1f1b(stage_params, head_p, x_emb, labels):
-        k_rank = jax.lax.axis_index(tcfg.pipe_axis)
-        starts_arr = jnp.asarray(starts_host, jnp.int32)
-        lens_arr = jnp.asarray(lens_host, jnp.int32)
-        items_tab = jnp.asarray(items_np, jnp.int32)
-        kind_tab = jnp.asarray(kind_np, jnp.int32)
-
-        def tick(carry, t):
-            (x_prev, g_prev, caches, gcache, rx, rc,
-             d_stage, d_ln, d_wh, d_emb, loss_acc) = carry
-            i_raw = jax.lax.dynamic_index_in_dim(
-                jax.lax.dynamic_index_in_dim(items_tab, t, 0, keepdims=False),
-                k_rank, 0, keepdims=False)
-            kind = jax.lax.dynamic_index_in_dim(
-                jax.lax.dynamic_index_in_dim(kind_tab, t, 0, keepdims=False),
-                k_rank, 0, keepdims=False)
-            i_c = jnp.clip(i_raw, 0, DM - 1)
-            mb_idx, sl_idx = i_c // M, i_c % M
-            ctx = jnp.take(starts_arr, sl_idx)
-            len_m = jnp.take(lens_arr, sl_idx)
-            slot = i_c % R
-            x0 = jax.lax.dynamic_slice(
-                x_emb, (mb_idx * mb_local, ctx, 0), (mb_local, l, d_model))
-            labels_sl = jax.lax.dynamic_slice(
-                labels, (mb_idx * mb_local, ctx), (mb_local, l))
-            mask = (jnp.arange(l) < len_m)[None, :]
-
-            def idle_branch(_):
-                return (x_prev, g_prev, caches, gcache, rx, rc,
-                        d_stage, d_ln, d_wh, d_emb, loss_acc)
-
-            def fwd_branch(_):
-                x_in = jnp.where(k_rank == 0, x0, x_prev)
-                fresh = sl_idx == 0              # new microbatch: new prefix
-                caches_in = jax.tree.map(
-                    lambda c: jnp.where(jnp.reshape(fresh, (1,) * c.ndim),
-                                        jnp.zeros_like(c), c), caches)
-                x_out, caches_out = p.stage_apply(stage_params, x_in,
-                                                  caches_in, ctx)
-                rx2 = jax.lax.dynamic_update_slice(
-                    rx, x_in[None], (slot, 0, 0, 0))
-                rc2 = jax.tree.map(
-                    lambda buf, c: jax.lax.dynamic_update_index_in_dim(
-                        buf, c, slot, 0), rc, caches_in)
-                return (x_out, g_prev, caches_out, gcache, rx2, rc2,
-                        d_stage, d_ln, d_wh, d_emb, loss_acc)
-
-            def bwd_branch(_):
-                x_saved = jax.lax.dynamic_index_in_dim(rx, slot, 0,
-                                                       keepdims=False)
-                c_saved = jax.tree.map(
-                    lambda buf: jax.lax.dynamic_index_in_dim(
-                        buf, slot, 0, keepdims=False), rc)
-
-                def unit(sp, xi, ci, hp):
-                    xo, co = p.stage_apply(sp, xi, ci, ctx)
-                    return xo, co, slice_loss(xo, hp, labels_sl, mask)
-
-                (_, _, ls), vjp = jax.vjp(unit, stage_params, x_saved,
-                                          c_saved, head_p)
-                is_last = k_rank == K - 1
-                # last stage seeds from its own loss, not the reverse ring
-                g_out = jnp.where(is_last, jnp.zeros_like(g_prev), g_prev)
-                # first bwd of a microbatch (slice M-1): no downstream-slice
-                # cache cotangent has accumulated yet
-                first_bwd = sl_idx == M - 1
-                gcache_in = jax.tree.map(
-                    lambda c: jnp.where(jnp.reshape(first_bwd, (1,) * c.ndim),
-                                        jnp.zeros_like(c), c), gcache)
-                seed = jnp.where(is_last, jnp.float32(1), jnp.float32(0))
-                d_sp, d_x_in, d_c_in, d_hp = vjp((g_out, gcache_in, seed))
-                d_stage2 = jax.tree.map(jnp.add, d_stage, d_sp)
-                add = jnp.where(k_rank == 0, d_x_in, jnp.zeros_like(d_x_in))
-                seg = jax.lax.dynamic_slice(
-                    d_emb, (mb_idx * mb_local, ctx, 0), (mb_local, l, d_model))
-                d_emb2 = jax.lax.dynamic_update_slice(
-                    d_emb, seg + add, (mb_idx * mb_local, ctx, 0))
-                return (x_prev, d_x_in, caches, d_c_in, rx, rc, d_stage2,
-                        d_ln + d_hp[0], d_wh + d_hp[1], d_emb2,
-                        loss_acc + jnp.where(is_last, ls, jnp.float32(0)))
-
-            out = jax.lax.switch(kind, (idle_branch, fwd_branch, bwd_branch),
-                                 0)
-            (x_send, g_send, caches2, gcache2, rx2, rc2,
-             d_stage2, d_ln2, d_wh2, d_emb2, loss2) = out
-            # activations ride the forward ring, cotangents the reverse one;
-            # consumers read a ring value only on the one tick the schedule
-            # delivers it (OneFOneB.validate), so off-kind sends are inert
-            x_next = jax.lax.ppermute(x_send, tcfg.pipe_axis, fwd_perm)
-            g_next = jax.lax.ppermute(g_send, tcfg.pipe_axis, rev_perm)
-            return (x_next, g_next, caches2, gcache2, rx2, rc2,
-                    d_stage2, d_ln2, d_wh2, d_emb2, loss2), None
-
-        caches0 = p.init_stage_caches((p.bps,))
-        carry = (
-            jnp.zeros((mb_local, l, d_model), cfg.dtype),       # x_prev
-            jnp.zeros((mb_local, l, d_model), cfg.dtype),       # g_prev
-            caches0,
-            jax.tree.map(jnp.zeros_like, caches0),              # gcache
-            jnp.zeros((R, mb_local, l, d_model), cfg.dtype),    # rx
-            jax.tree.map(lambda a: jnp.zeros((R,) + a.shape, a.dtype),
-                         caches0),                              # rc
-            jax.tree.map(jnp.zeros_like, stage_params),         # d_stage
-            jnp.zeros_like(head_p[0]),                          # d_ln
-            jnp.zeros_like(head_p[1]),                          # d_wh
-            jnp.zeros_like(x_emb),                              # d_emb
-            jnp.float32(0),                                     # loss
-        )
-        if tcfg.unroll:
-            for t in range(ticks):
-                carry, _ = tick(carry, jnp.int32(t))
-        else:
-            carry, _ = jax.lax.scan(tick, carry,
-                                    jnp.arange(ticks, dtype=jnp.int32))
-        d_stage, d_ln, d_wh, d_emb, loss_acc = carry[6:]
-        axes_all = (tcfg.pipe_axis,) + tuple(tcfg.data_axes)
-        loss = jax.lax.psum(loss_acc, axes_all)
-        d_ln = jax.lax.psum(d_ln, axes_all)
-        d_wh = jax.lax.psum(d_wh, axes_all)
-        d_emb = jax.lax.psum(d_emb, tcfg.pipe_axis)    # only rank 0 nonzero
-        d_stage = jax.tree.map(
-            lambda a: jax.lax.psum(a, tuple(tcfg.data_axes)), d_stage)
-        return loss, d_emb, d_stage, d_ln, d_wh
-
+    pipeline_body = _make_pipeline_body(p)
     head_in_specs = (P(None), P(None, None))
     labels_spec = P(tcfg.data_axes, None)
     shmap = compat_shard_map(
-        pipeline_1f1b, mesh=mesh,
+        lambda sp, hp, x, lab: pipeline_body(sp, x, hp, lab), mesh=p.mesh,
         in_specs=(p.stage_in_specs, head_in_specs, p.x_spec, labels_spec),
-        out_specs=(P(), P(tcfg.data_axes, None, None), p.stage_in_specs,
-                   P(None), P(None, None)),
+        out_specs=(P(), p.stage_in_specs, P(None), P(None, None),
+                   P(tcfg.data_axes, None, None)),
         check_vma=False)
 
     def value_and_grad_fn(params, batch):
         x_emb, prefix_vjp = jax.vjp(lambda prm: p.prefix(prm, batch), params)
         labels = batch["labels"]
         if not p.uniform:
-            labels = jnp.pad(labels, ((0, 0), (0, l)))
+            labels = jnp.pad(labels, ((0, 0), (0, p.l)))
         w_head = params["embed"].T if tied else params["lm_head"]
         head_p = (params["final_ln"], w_head)
         stage_params = p.prep_stage_params(params["groups"][main.name])
-        loss, d_emb, d_stage, d_ln, d_wh = shmap(stage_params, head_p,
+        loss, d_stage, d_ln, d_wh, d_emb = shmap(stage_params, head_p,
                                                  x_emb, labels)
         (grads,) = prefix_vjp(d_emb)             # embed (+ pre groups) grads
         grads = dict(grads)
         grads["groups"] = dict(grads["groups"])
-        # unpad the stage grads (pad rows are identity blocks: zero grad by
-        # construction) and merge with the (zero) main-group prefix grads
+        # stage grads come back in the executor's rank-major chunk order:
+        # restore layer order, unpad (pad rows are identity blocks: zero
+        # grad by construction), merge with the (zero) main-group prefix
+        # grads
         grads["groups"][main.name] = jax.tree.map(
-            lambda a, d: a + jax.lax.slice_in_dim(d, 0, p.n_main, axis=0),
+            lambda a, d: a + jax.lax.slice_in_dim(
+                uninterleave_stacked(d, p.assign), 0, p.n_main, axis=0),
             grads["groups"][main.name], d_stage)
         grads["final_ln"] = grads["final_ln"] + d_ln
         if tied:
@@ -833,18 +856,18 @@ def _make_one_f_one_b_vg(p: _Plan):
 def make_terapipe_value_and_grad(model: Model, specs, mesh: Mesh,
                                  tcfg: TeraPipeConfig, seq_len: int,
                                  global_batch: int):
-    """(params, batch) -> (loss, grads) for ANY schedule — the one entry
-    point train/dryrun drive.  Contiguous/interleaved wrap the fwd-only loss
-    in ``jax.value_and_grad`` (autodiff backward, activations live to the
-    drain); ``schedule='1f1b'`` runs the explicit-backward executor (live
-    activations bounded by the pipeline depth).  Also returns the param
-    sharding tree builder."""
-    if tcfg.schedule != "1f1b":
-        loss_fn, param_sh = make_terapipe_loss(model, specs, mesh, tcfg,
-                                               seq_len, global_batch)
-        return jax.value_and_grad(loss_fn), param_sh
+    """(params, batch) -> (loss, grads) for ANY registered schedule — the
+    one entry point train/dryrun drive.  Fwd-only schedules (contiguous /
+    interleaved) wrap the interpreter's loss in ``jax.value_and_grad``
+    (autodiff backward, activations live to the drain); explicit-bwd
+    schedules (1f1b / interleaved-1f1b) run the SAME interpreter's
+    loss+grad program (live activations bounded by the pipeline depth).
+    Also returns the param sharding tree builder."""
     p = _Plan(model, specs, mesh, tcfg, seq_len, global_batch)
-    return _make_one_f_one_b_vg(p), p.param_shardings_fn()
+    if not p.assign.has_backward:
+        return (jax.value_and_grad(_make_loss_from_plan(p)),
+                p.param_shardings_fn())
+    return _make_explicit_value_and_grad(p), p.param_shardings_fn()
 
 
 def make_gpipe_loss(model: Model, specs, mesh: Mesh, *, n_microbatches: int,

@@ -10,71 +10,153 @@ A schedule is a :class:`StageAssignment`: ``K`` pipeline ranks each holding
 Global stage ``s`` owns the contiguous layer rows ``[s·bpc, (s+1)·bpc)`` of
 the (padded) stacked main group and lives on rank ``s mod K`` as chunk
 ``s // K`` — round-robin, Megatron-LM's interleaved virtual pipeline
-(Narayanan et al., 2021).  The IR answers three questions:
+(Narayanan et al., 2021).  The IR answers four questions:
 
 * **placement** — which layer rows live on which rank, and in what local
   order (:meth:`StageAssignment.param_permutation` /
-  :func:`interleave_stacked`: rank-major chunk order, so a plain
-  pipe-sharding of the leading layer axis hands rank ``k`` exactly chunks
-  ``k, K+k, …, (V-1)·K+k``);
-* **timing** — the tick table mapping ``(tick, rank) -> (work_item, chunk)``
-  (:meth:`StageAssignment.tick_table`), with
-  :meth:`StageAssignment.unit_index` as the pure-arithmetic form the rolled
-  executor evaluates on the *traced* tick index (shape-stable: one tick
-  program serves every table entry);
+  :func:`interleave_stacked` / :func:`uninterleave_stacked`: rank-major
+  chunk order, so a plain pipe-sharding of the leading layer axis hands rank
+  ``k`` exactly chunks ``k, K+k, …, (V-1)·K+k``);
+* **timing** — the tick table mapping ``(tick, rank) -> (work_item, chunk,
+  is_bwd)`` (:meth:`StageAssignment.tick_table`);
+* **communication** — :meth:`StageAssignment.comm_plan`: which ppermute
+  rings fire each tick (forward activation ring, reverse cotangent ring)
+  and the *skew hold* of each — how many extra ticks a wrap-around chunk
+  handoff sits in a destination-side ring buffer before its consumer runs;
 * **validity** — :meth:`StageAssignment.validate` audits that every
-  ``(work_item, stage)`` unit runs exactly once and lands exactly one tick
-  after its producer on the ring predecessor.
+  ``(work_item, stage)`` unit runs exactly once and that every dependency
+  lands exactly when the comm plan says the rings + skew buffers deliver
+  it; failures raise :class:`ScheduleValidationError` naming the first
+  offending (tick, rank, unit) and the expected source rank.
 
-The V-pass ppermute ring
-------------------------
+The single executor (``core/pipeline``) interprets exactly this surface —
+tick table + comm plan — so a new schedule is an IR subclass plus a
+:func:`register_schedule` call, with **no executor changes**.
 
-The executor's only collective is the single ring
-``ppermute [(k, (k+1) mod K)]`` issued once per tick.  Under interleaving
-each work item traverses that ring **V times**: chunk ``v`` flows down ranks
-``0..K-1`` and the wrap-around edge ``K-1 -> 0`` — a bubble in the
-contiguous schedule — carries the live chunk ``v -> v+1`` handoff.  Work
-items advance in groups of ``K`` (``D·M`` must divide by ``K`` for ``V>1``):
-rank ``k``'s ``u``-th unit is work item ``(u÷(K·V))·K + u mod K`` on chunk
-``(u mod K·V) ÷ K``, which makes every dependency arrive exactly one tick
-ahead of its consumer (see ``validate``).  Fill/drain shrinks from ``K-1``
-ticks of *full-stage* work to ``K-1`` ticks of *chunk* (``1/V``) work:
-bubble fraction ``(K-1)/V / (D·M + (K-1)/V)``.
-
-Why non-uniform token slices compose with interleaving
-------------------------------------------------------
-
-TeraPipe's DP-planned slice lengths (paper §3.3) only determine each work
-item's ``(microbatch, slice, context)`` coordinates — *what* a unit
-computes.  The interleave dimension only determines *where and when* a unit
-runs (which chunk, which tick).  Each chunk observes work items in the same
-global order ``0..D·M-1`` as the contiguous schedule, so the per-chunk KV /
-SSM state sees the exact prefix semantics of the V=1 executor and the two
-optimizations multiply: slicing shrinks per-item latency, interleaving
-divides the remaining fill/drain bubble by V.  (The planner accounts for
-the composition by weighting the Eq. 5 bubble term with ``(K-1)/V`` — see
-``core/dp.optimal_slicing(virtual_stages=...)``.)
-
-Unit kinds and the 1F1B schedule
---------------------------------
+Unit kinds and the 1F1B family
+------------------------------
 
 A unit is ``(work_item, chunk, is_bwd)``.  :func:`contiguous` and
 :func:`interleaved` are fwd-only tables (their backward pass is the autodiff
 transpose of the whole program, so every saved residual lives to the drain:
-``peak_live_items() == D·M·V``).  :class:`OneFOneB` (:func:`one_f_one_b`)
-schedules explicit bwd units 1F1B-style: fwd of item i on rank k at tick
-``2i + k``, bwd units one tick behind the reverse ``(k -> k-1)`` ring,
-microbatch-ascending but slice-descending within a microbatch (TeraPipe's
-attention-cache cotangents accumulate in reverse slice order).  The audit
-surface grows accordingly: ``validate()`` additionally proves each bwd unit
-lands one tick after its downstream bwd on the reverse ring and strictly
-after its own fwd, and ``peak_live_items()`` proves the 1F1B table keeps
-only ``min(D·M, K + M - 1)`` items' residuals live per rank — flat in the
-microbatch count D — where the fwd-only tables keep all ``D·M·V``.
+``peak_live_items() == D·M·V``).  :class:`OneFOneB` schedules explicit bwd
+units 1F1B-style — microbatch-ascending but slice-DESCENDING within a
+microbatch (TeraPipe's attention-cache cotangents accumulate in reverse
+slice order) — bounding live residuals by the pipeline depth instead of the
+work-item count.  :class:`InterleavedOneFOneB` composes both: the 1F1B unit
+ordering over V round-robin chunks, with the wrap-around chunk handoffs
+held K ticks in the skew buffers its comm plan declares — an IR-only
+schedule the unified executor runs with no schedule-specific code.
 Chimera-style bidirectional pairs remain future schedules on the same IR.
-"""
-from .ir import (OneFOneB, StageAssignment, contiguous,  # noqa: F401
-                 interleaved, interleave_stacked, one_f_one_b)
 
-__all__ = ["OneFOneB", "StageAssignment", "contiguous", "interleaved",
-           "interleave_stacked", "one_f_one_b"]
+The registry
+------------
+
+:data:`REGISTRY` maps schedule names to factories + CLI metadata.  The
+train/dryrun ``--schedule`` choices, the simulator's lockstep disciplines,
+and the executor's schedule resolution are all built from it, so
+registering a schedule here surfaces it everywhere at once.
+"""
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from .ir import (CommPlan, InterleavedOneFOneB, OneFOneB,  # noqa: F401
+                 ScheduleValidationError, StageAssignment, contiguous,
+                 interleave_stacked, interleaved, interleaved_one_f_one_b,
+                 one_f_one_b, uninterleave_stacked)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """Registry entry: how to build a schedule and how the CLIs present it.
+
+    ``factory(n_ranks, virtual_stages, n_layers, n_microbatches)`` must
+    return a :class:`StageAssignment`.  ``min_virtual``/``max_virtual``
+    bound the legal ``--virtual-stages`` range (None = unbounded)."""
+    name: str
+    factory: Callable[[int, int, int, int], StageAssignment]
+    help: str
+    min_virtual: int = 1
+    max_virtual: Optional[int] = 1
+    has_backward: bool = False
+
+
+REGISTRY: Dict[str, ScheduleSpec] = {}
+
+
+def register_schedule(spec: ScheduleSpec) -> ScheduleSpec:
+    """Add a schedule to the registry (train/dryrun CLI choices, simulator
+    discipline dispatch, and executor resolution all read it)."""
+    assert spec.name not in REGISTRY, f"duplicate schedule {spec.name!r}"
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def schedule_names() -> Tuple[str, ...]:
+    return tuple(REGISTRY)
+
+
+def schedule_help() -> str:
+    """One line per registered schedule, for CLI help text."""
+    return "; ".join(f"{n} = {s.help}" for n, s in REGISTRY.items())
+
+
+def check_virtual_stages(name: str, virtual_stages: int) -> None:
+    """Raise ValueError if ``virtual_stages`` is illegal for ``name``."""
+    spec = REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown schedule {name!r}; registered: {list(REGISTRY)}")
+    if virtual_stages < spec.min_virtual:
+        raise ValueError(
+            f"--schedule {name} needs --virtual-stages >= {spec.min_virtual}"
+            f", got {virtual_stages}")
+    if spec.max_virtual is not None and virtual_stages > spec.max_virtual:
+        raise ValueError(
+            f"--schedule {name} is a V={spec.max_virtual} schedule "
+            f"(got --virtual-stages {virtual_stages}); see core/schedules")
+
+
+def get_schedule(name: str, *, n_ranks: int, n_layers: int,
+                 virtual_stages: int = 1,
+                 n_microbatches: int = 1) -> StageAssignment:
+    """Build a registered schedule, validating the V range first."""
+    check_virtual_stages(name, virtual_stages)
+    return REGISTRY[name].factory(n_ranks, virtual_stages, n_layers,
+                                  n_microbatches)
+
+
+register_schedule(ScheduleSpec(
+    name="contiguous",
+    factory=lambda K, V, n, D: StageAssignment(K, 1, n),
+    help="the paper's TeraPipe table (V=1, autodiff backward)",
+))
+register_schedule(ScheduleSpec(
+    name="interleaved",
+    factory=lambda K, V, n, D: StageAssignment(K, V, n),
+    help="Megatron virtual stages (set --virtual-stages >= 2; autodiff "
+         "backward, ~V× smaller bubble)",
+    min_virtual=2, max_virtual=None,
+))
+register_schedule(ScheduleSpec(
+    name="1f1b",
+    factory=lambda K, V, n, D: OneFOneB(K, 1, n, D),
+    help="memory-bounded explicit-backward table (V=1; live activations "
+         "flat in the microbatch count)",
+    has_backward=True,
+))
+register_schedule(ScheduleSpec(
+    name="interleaved-1f1b",
+    factory=lambda K, V, n, D: InterleavedOneFOneB(K, V, n, D),
+    help="skew-buffered interleaved 1F1B (V >= 2): 1F1B's flat-in-D memory "
+         "bound with interleaving's ~V× smaller bubble",
+    min_virtual=2, max_virtual=None, has_backward=True,
+))
+
+
+__all__ = ["CommPlan", "InterleavedOneFOneB", "OneFOneB", "REGISTRY",
+           "ScheduleSpec", "ScheduleValidationError", "StageAssignment",
+           "check_virtual_stages", "contiguous", "get_schedule",
+           "interleave_stacked", "interleaved", "interleaved_one_f_one_b",
+           "one_f_one_b", "register_schedule", "schedule_help",
+           "schedule_names", "uninterleave_stacked"]

@@ -1,4 +1,5 @@
-"""Schedule IR: stage/chunk placement and tick geometry (see package doc).
+"""Schedule IR: stage/chunk placement, tick geometry, and the comm plan the
+executor interprets (see package doc).
 
 Unit kinds (fwd + bwd)
 ----------------------
@@ -8,15 +9,54 @@ Forward-only schedules (``contiguous``, ``interleaved``) emit only
 ``is_bwd == 0`` units — their backward pass is the autodiff transpose of the
 whole fwd program, so every unit's saved residuals stay live until the drain
 (``peak_live_items() == n_items·V``).  Schedules with explicit backward
-units (:class:`OneFOneB`) retire a unit's residuals at its bwd tick, which
-is what bounds live memory by the pipeline depth instead of the work-item
-count (Narayanan et al. 2021 §2.2).
+units (:class:`OneFOneB`, :class:`InterleavedOneFOneB`) retire a unit's
+residuals at its bwd tick, which is what bounds live memory by the pipeline
+depth instead of the work-item count (Narayanan et al. 2021 §2.2).
+
+The comm plan
+-------------
+
+:meth:`StageAssignment.comm_plan` declares everything the executor needs to
+move data between ranks: which ppermute rings fire each tick (the forward
+``k -> k+1`` activation ring, and for explicit-bwd schedules the reverse
+``k -> k-1`` cotangent ring) and the **skew hold** of each ring — the extra
+ticks a wrap-around chunk handoff (global stage ``v·K+K-1 -> (v+1)·K``) sits
+in a destination-side ring buffer before its consumer runs.  Hold 0 means
+every dependency is consumed exactly one tick after the ring delivers it
+(the one-hop invariant of the fwd-only schedules); interleaved 1F1B holds
+wrap handoffs K ticks (the producing and consuming units are 2K units apart
+in the 2×-dilated tick numbering).  ``validate()`` audits delivery against
+exactly these delays, so a schedule whose table and comm plan disagree is
+rejected before it ever reaches the executor.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+
+class ScheduleValidationError(AssertionError):
+    """A tick-table audit failure, pinpointing the first offending unit
+    (in tick order) and the source rank/tick the comm plan expected."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """What the executor's per-tick communication must look like.
+
+    ``fwd_hold`` / ``rev_hold``: extra ticks a wrap-around chunk handoff
+    (the ``K-1 -> 0`` forward edge / the ``0 -> K-1`` reverse edge) is held
+    in a skew ring buffer at the destination before its consumer tick.  A
+    value produced at tick ``t`` is consumed at ``t + 1 + hold``; hold 0 is
+    the plain one-hop delivery.  The executor sizes its skew buffers
+    ``hold + 1`` deep and pushes every received ring value, so slot
+    ``t mod (hold+1)`` is overwritten exactly when it can no longer be read.
+    """
+    fwd_ring: bool = True       # activation ring (k -> k+1) fires every tick
+    rev_ring: bool = False      # cotangent ring (k -> k-1); explicit-bwd only
+    fwd_hold: int = 0
+    rev_hold: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,9 +135,7 @@ class StageAssignment:
     def unit_index(self, u):
         """(work_item, chunk, is_bwd) of a rank's u-th unit.  Pure arithmetic
         in u — evaluates on python ints, numpy arrays, and traced jax scalars
-        alike (the rolled executor calls it with the traced tick index, so
-        the one traced tick program serves the whole tick table).  Fwd-only
-        schedules always return ``is_bwd == 0``."""
+        alike.  Fwd-only schedules always return ``is_bwd == 0``."""
         K, V = self.n_ranks, self.virtual_stages
         if V == 1:
             return u, u * 0, u * 0
@@ -107,7 +145,10 @@ class StageAssignment:
 
     def tick_table(self, n_items: int) -> np.ndarray:
         """(n_ticks, K, 3) array; entry (t, k) = (work_item, chunk, is_bwd),
-        or (-1, -1, -1) when rank k idles (fill/drain) at tick t."""
+        or (-1, -1, -1) when rank k idles (fill/drain) at tick t.  THE
+        interface the unified executor interprets: every schedule — fwd-only
+        or explicit-bwd — is completely described by this table plus
+        :meth:`comm_plan`."""
         T, K = self.n_ticks(n_items), self.n_ranks
         n_units = self.n_units(n_items)
         tab = np.full((T, K, 3), -1, np.int64)
@@ -119,6 +160,15 @@ class StageAssignment:
             tab[ok, k, 1] = np.broadcast_to(v, (T,))[ok]
             tab[ok, k, 2] = 0
         return tab
+
+    def comm_plan(self) -> CommPlan:
+        """Ring/skew description for the executor (see :class:`CommPlan`).
+        Fwd-only schedules deliver every dependency — including the
+        interleaved wrap-around handoff — exactly one tick after production
+        (the group-of-K unit ordering makes the wrap edge line up), so no
+        skew buffers and no reverse ring."""
+        return CommPlan(fwd_ring=True, rev_ring=self.has_backward,
+                        fwd_hold=0, rev_hold=0)
 
     # ---- audits ----------------------------------------------------------
     def _collect(self, n_items: int):
@@ -132,49 +182,89 @@ class StageAssignment:
                     continue
                 s = self.stage_of(k, v)
                 d = when_b if bwd else when_f
-                assert (i, s) not in d, \
-                    f"{'bwd' if bwd else 'fwd'} unit {(i, s)} scheduled twice"
+                if (i, s) in d:
+                    raise ScheduleValidationError(
+                        f"{'bwd' if bwd else 'fwd'} unit (item={i}, "
+                        f"stage={s}) scheduled twice: at (tick={d[(i, s)][0]},"
+                        f" rank={d[(i, s)][1]}) and (tick={t}, rank={k})")
                 d[(i, s)] = (t, k)
         return when_f, when_b
 
     def validate(self, n_items: int) -> bool:
-        """Audit the tick table: every (work_item, stage) fwd unit runs
-        exactly once, one unit per (tick, rank), and each fwd unit's producer
-        (previous global stage of the same item) ran on the ring predecessor
-        exactly one tick earlier — i.e. the single per-tick ppermute ring
-        delivers every dependency just in time.  Schedules with bwd units
-        additionally audit: item i's bwd at stage s runs exactly once, one
-        tick after stage s+1's bwd on the ring *successor* (the reverse
-        ppermute ring), strictly after its own fwd at stage s (the saved
-        residuals exist), and in an order consistent with any schedule-
-        specific constraint (:meth:`_audit_backward_order`)."""
+        """Audit the tick table against the comm plan: every
+        (work_item, stage) fwd unit runs exactly once, one unit per
+        (tick, rank), and each fwd unit's producer (previous global stage of
+        the same item) ran on the ring predecessor exactly
+        ``1 + fwd_hold``-ticks-for-wrap-edges / 1-tick-otherwise earlier —
+        i.e. the per-tick ppermute ring plus the declared skew buffers
+        deliver every dependency just in time.  Schedules with bwd units
+        additionally audit: item i's bwd at stage s runs exactly once,
+        ``1 (+ rev_hold on the reverse wrap edge)`` ticks after stage s+1's
+        bwd on the ring *successor* (the reverse ppermute ring), strictly
+        after its own fwd at stage s (the saved residuals exist), and in an
+        order consistent with any schedule-specific constraint
+        (:meth:`_audit_backward_order`).  Failures raise
+        :class:`ScheduleValidationError` naming the first offending
+        (tick, rank, unit) and the expected source rank/tick."""
+        plan = self.comm_plan()
+        K = self.n_ranks
         when_f, when_b = self._collect(n_items)
-        assert len(when_f) == n_items * self.n_stages, (
-            len(when_f), n_items, self.n_stages)
-        for (i, s), (t, k) in when_f.items():
+        if len(when_f) != n_items * self.n_stages:
+            raise ScheduleValidationError(
+                f"expected {n_items}·{self.n_stages} = "
+                f"{n_items * self.n_stages} fwd units, table schedules "
+                f"{len(when_f)}")
+        for (i, s), (t, k) in sorted(when_f.items(), key=lambda kv: kv[1]):
             if s == 0:
                 continue
             tp, kp = when_f[(i, s - 1)]
-            assert tp == t - 1 and kp == (k - 1) % self.n_ranks, (
-                f"fwd unit (item={i}, stage={s}) at (t={t}, k={k}) but "
-                f"producer ran at (t={tp}, k={kp}); ring cannot deliver it")
+            delay = 1 + (plan.fwd_hold if s % K == 0 else 0)
+            want_k = (k - 1) % K
+            if tp != t - delay or kp != want_k:
+                raise ScheduleValidationError(
+                    f"fwd unit (item={i}, stage={s}) at (tick={t}, rank={k})"
+                    f": expected its producer (item={i}, stage={s - 1}) on "
+                    f"ring predecessor rank {want_k} at tick {t - delay} "
+                    f"(delay {delay}"
+                    + (f" = 1 hop + {delay - 1}-tick skew hold"
+                       if delay > 1 else "")
+                    + f"), but it ran at (tick={tp}, rank={kp}); the forward "
+                    f"ring cannot deliver it")
         if not self.has_backward:
-            assert not when_b
+            if when_b:
+                (i, s), (t, k) = sorted(when_b.items(),
+                                        key=lambda kv: kv[1])[0]
+                raise ScheduleValidationError(
+                    f"fwd-only schedule emits a bwd unit (item={i}, "
+                    f"stage={s}) at (tick={t}, rank={k})")
             return True
-        assert len(when_b) == n_items * self.n_stages, (
-            len(when_b), n_items, self.n_stages)
-        for (i, s), (t, k) in when_b.items():
+        if len(when_b) != n_items * self.n_stages:
+            raise ScheduleValidationError(
+                f"expected {n_items}·{self.n_stages} = "
+                f"{n_items * self.n_stages} bwd units, table schedules "
+                f"{len(when_b)}")
+        for (i, s), (t, k) in sorted(when_b.items(), key=lambda kv: kv[1]):
             tf, _ = when_f[(i, s)]
-            assert tf < t, (
-                f"bwd unit (item={i}, stage={s}) at t={t} before its own fwd "
-                f"at t={tf}: no residuals to transpose")
+            if tf >= t:
+                raise ScheduleValidationError(
+                    f"bwd unit (item={i}, stage={s}) at (tick={t}, rank={k})"
+                    f" runs before its own fwd at tick {tf}: no residuals "
+                    f"to transpose")
             if s == self.n_stages - 1:
                 continue           # seeds from the loss, not the ring
             tp, kp = when_b[(i, s + 1)]
-            assert tp == t - 1 and kp == (k + 1) % self.n_ranks, (
-                f"bwd unit (item={i}, stage={s}) at (t={t}, k={k}) but its "
-                f"cotangent producer ran at (t={tp}, k={kp}); the reverse "
-                f"ring cannot deliver it")
+            delay = 1 + (plan.rev_hold if (s + 1) % K == 0 else 0)
+            want_k = (k + 1) % K
+            if tp != t - delay or kp != want_k:
+                raise ScheduleValidationError(
+                    f"bwd unit (item={i}, stage={s}) at (tick={t}, rank={k})"
+                    f": expected its cotangent producer (item={i}, "
+                    f"stage={s + 1}) on reverse-ring predecessor rank "
+                    f"{want_k} at tick {t - delay} (delay {delay}"
+                    + (f" = 1 hop + {delay - 1}-tick skew hold"
+                       if delay > 1 else "")
+                    + f"), but it ran at (tick={tp}, rank={kp}); the reverse "
+                    f"ring cannot deliver it")
         self._audit_backward_order(when_b)
         return True
 
@@ -183,14 +273,16 @@ class StageAssignment:
 
     def peak_live_items(self, n_items: int) -> int:
         """Max, over ranks, of simultaneously-live saved residuals (units
-        whose fwd has run but whose bwd has not yet retired them).
+        whose fwd has run but whose bwd has not yet retired them), summed
+        over the rank's V chunks.
 
         Fwd-only schedules transpose the whole program at the drain, so every
         unit a rank ran is still live there: peak = ``n_items·V`` (= D·M·V).
         1F1B retires unit residuals at the unit's own bwd tick, bounding the
         peak by the pipeline depth plus the per-microbatch bwd turnaround
-        (``min(n_items, K + M - 1)`` at V=1) — independent of the microbatch
-        count D that the DP planner scales."""
+        (``min(n_items, K + M - 1)`` at V=1; ~``(V-1)·K`` more per extra
+        chunk under interleaved 1F1B) — independent of the microbatch count
+        D that the DP planner scales."""
         tab = self.tick_table(n_items)
         T = tab.shape[0]
         peak = 0
@@ -214,53 +306,65 @@ class StageAssignment:
 
     def residual_spread(self, n_items: int) -> int:
         """Ring-buffer depth for an explicit-bwd executor: the max, over
-        ranks and ticks, of ``max(live item idx) - min(live item idx) + 1``.
-        Indexing the residual store with ``item % residual_spread`` is then
-        collision-free.  ≥ :meth:`peak_live_items` (the live set need not be
-        contiguous in item index: bwd retires within-microbatch in reverse)."""
+        ranks, ticks and CHUNKS, of ``max(live item idx) - min(live item
+        idx) + 1`` among items whose residuals are live at that (rank,
+        chunk).  Indexing the per-chunk residual store with ``item %
+        residual_spread`` is then collision-free.  Tracked per chunk because
+        the executor keys its store ``(chunk, item % spread)`` — items live
+        at *different* chunks never collide."""
         tab = self.tick_table(n_items)
-        spread = 0
+        spread = 1
         for k in range(self.n_ranks):
-            live = set()
+            live = {}
             for t in range(tab.shape[0]):
                 i, v, bwd = (int(x) for x in tab[t, k])
                 if i < 0:
                     continue
+                lv = live.setdefault(v, set())
                 if bwd:
-                    if live:
-                        spread = max(spread, max(live) - min(live) + 1)
-                    live.discard(i)
+                    if lv:
+                        spread = max(spread, max(lv) - min(lv) + 1)
+                    lv.discard(i)
                 else:
-                    live.add(i)
-                    spread = max(spread, max(live) - min(live) + 1)
-        return max(spread, 1)
+                    lv.add(i)
+                    spread = max(spread, max(lv) - min(lv) + 1)
+        return spread
 
 
 @dataclasses.dataclass(frozen=True)
 class OneFOneB(StageAssignment):
-    """Memory-bounded 1F1B schedule (Narayanan et al. 2021), token-level.
+    """Memory-bounded 1F1B schedule (Narayanan et al. 2021), token-level,
+    generalized to V ≥ 1 virtual stages (V ≥ 2 is the *interleaved* 1F1B of
+    Megatron-LM; construct it via :class:`InterleavedOneFOneB` / the
+    ``interleaved-1f1b`` registry entry).
 
     Explicit fwd AND bwd units in one lockstep tick table.  Work item
-    ``i = d·M + m`` (microbatch d, token slice m): fwds run in item order;
-    bwds run microbatch-ascending but slice-DESCENDING within a microbatch —
-    TeraPipe's attention cache makes slice m's kv entries inputs of every
-    later slice m' > m, so their cotangents only finish accumulating once
-    all later slices' bwds have run (the reverse of the fwd prefix chain).
+    ``i = d·M + m`` (microbatch d, token slice m).  Fwd units follow the
+    interleaved unit ordering (groups of K items, chunk-ascending within a
+    group — the fwd-only ``interleaved`` order, 2×-dilated to make room for
+    bwd ticks); bwd units mirror it with chunks DESCENDING within a group
+    and slices DESCENDING within a microbatch — TeraPipe's attention cache
+    makes slice m's kv entries inputs of every later slice m' > m, so their
+    cotangents only finish accumulating once all later slices' bwds have run.
 
-    Timing (K ranks, N items, M slices per microbatch; V must be 1):
+    Timing (K ranks, N items, M slices per microbatch, V chunks):
 
-    * fwd of item i on rank k at tick ``2i + k``;
-    * the j-th bwd unit (item ``(j÷M)·M + (M-1 - j mod M)``) on rank k at
-      tick ``2j + 2M + 2K - 3 - k``.
+    * fwd unit u on rank k at tick ``2u + k``;
+    * bwd unit j on rank k at tick ``2j + C - k``, with the phase
+      ``C = 2·max_j(u_f(j) - j) + 2K - 1`` the smallest odd offset putting
+      every bwd strictly after its own fwd on every rank (``u_f(j)`` is the
+      fwd unit computing what bwd unit j transposes).  V=1 reduces to the
+      classic ``C = 2M + 2K - 3``.
 
     Activations flow down the ``(k -> k+1)`` ring, cotangents down the
     reverse ``(k -> k-1)`` ring; fwd and bwd ticks interleave collision-free
-    because their per-rank parities differ (``2K-1-2k`` is odd).  Total
-    ticks ``2N + 2M + 2K - 4`` — the same 2(K-1) steady-state bubble as the
-    contiguous fwd+bwd program plus a 2(M-1) per-microbatch bwd turnaround
-    (zero at M=1, the classic microbatch-1F1B).  Peak live residuals
-    ``min(N, K + M - 1)`` per rank instead of N = D·M: flat in the
-    microbatch count D.
+    because their per-rank parities differ (C is odd).  For V ≥ 2 the
+    wrap-around chunk handoffs (fwd ``K-1 -> 0``, bwd ``0 -> K-1``) are
+    produced 2K units before their consumers in the dilated numbering, so
+    they ride their ring one hop and then sit K ticks in a skew buffer
+    (``comm_plan().fwd_hold == rev_hold == K``).  Peak live residuals stay
+    flat in the microbatch count D (saturating near ``C/2 ≈ (V-1)·K+M+K``),
+    where the fwd-only schedules hold all D·M·V.
     """
     n_microbatches: int = 1
 
@@ -268,11 +372,6 @@ class OneFOneB(StageAssignment):
 
     def __post_init__(self):
         super().__post_init__()
-        assert self.virtual_stages == 1, (
-            "1F1B requires V=1: interleaved 1F1B needs multi-tick skew "
-            "buffers that break the one-hop ppermute delivery invariant "
-            "(see ROADMAP); compose memory-bounding with interleaving via "
-            "a future schedule")
         assert self.n_microbatches >= 1, self
 
     def _slices_per_microbatch(self, n_items: int) -> int:
@@ -283,13 +382,32 @@ class OneFOneB(StageAssignment):
         return n_items // D
 
     def n_units(self, n_items: int) -> int:
-        """Per-rank units: one fwd AND one bwd per work item."""
+        """Per-rank units: one fwd AND one bwd per (work item, chunk)."""
         self._slices_per_microbatch(n_items)
-        return 2 * n_items
+        return 2 * super().n_units(n_items)
+
+    def _bwd_unit(self, u, M: int):
+        """(work_item, chunk) of a rank's u-th BACKWARD unit: the
+        interleaved group order with chunks descending within a group and
+        slices descending within a microbatch."""
+        K, V = self.n_ranks, self.virtual_stages
+        KV = K * V
+        g, r = u // KV, u % KV
+        i_seq = g * K + r % K
+        item = (i_seq // M) * M + (M - 1 - i_seq % M)
+        return item, (V - 1) - r // K
+
+    def _bwd_phase(self, n_items: int) -> int:
+        """C in ``bwd tick = 2j + C - k`` (see class doc)."""
+        K, V = self.n_ranks, self.virtual_stages
+        M = self._slices_per_microbatch(n_items)
+        u = np.arange(super().n_units(n_items))
+        bi, bv = self._bwd_unit(u, M)
+        u_f = (bi // K) * K * V + bv * K + bi % K   # fwd unit of (item, chunk)
+        return 2 * int(np.max(u_f - u)) + 2 * K - 1
 
     def n_ticks(self, n_items: int) -> int:
-        M = self._slices_per_microbatch(n_items)
-        return 2 * n_items + 2 * M + 2 * self.n_ranks - 4
+        return 2 * super().n_units(n_items) + self._bwd_phase(n_items) - 1
 
     def unit_index(self, u):
         raise NotImplementedError(
@@ -298,23 +416,26 @@ class OneFOneB(StageAssignment):
             "instead of closed-form unit arithmetic")
 
     def tick_table(self, n_items: int) -> np.ndarray:
-        N, K = n_items, self.n_ranks
-        M = self._slices_per_microbatch(N)
-        T = self.n_ticks(N)
-        tab = np.full((T, K, 3), -1, np.int64)
-        i = np.arange(N)
-        bwd_items = (i // M) * M + (M - 1 - i % M)       # item of j-th bwd
+        K = self.n_ranks
+        M = self._slices_per_microbatch(n_items)
+        NV = super().n_units(n_items)
+        C = self._bwd_phase(n_items)
+        tab = np.full((2 * NV + C - 1, K, 3), -1, np.int64)  # = n_ticks(N)
+        u = np.arange(NV)
+        fi, fv, _ = StageAssignment.unit_index(self, u)
+        bi, bv = self._bwd_unit(u, M)
         for k in range(K):
-            t_f = 2 * i + k
-            tab[t_f, k, 0] = i
-            tab[t_f, k, 1] = 0
-            tab[t_f, k, 2] = 0
-            t_b = 2 * i + 2 * M + 2 * K - 3 - k
+            t_f = 2 * u + k
+            tab[t_f, k, 0], tab[t_f, k, 1], tab[t_f, k, 2] = fi, fv, 0
+            t_b = 2 * u + C - k
             assert not np.intersect1d(t_f, t_b).size      # parity-disjoint
-            tab[t_b, k, 0] = bwd_items
-            tab[t_b, k, 1] = 0
-            tab[t_b, k, 2] = 1
+            tab[t_b, k, 0], tab[t_b, k, 1], tab[t_b, k, 2] = bi, bv, 1
         return tab
+
+    def comm_plan(self) -> CommPlan:
+        hold = self.n_ranks if self.virtual_stages > 1 else 0
+        return CommPlan(fwd_ring=True, rev_ring=True,
+                        fwd_hold=hold, rev_hold=hold)
 
     def _audit_backward_order(self, when_b):
         """Within each microbatch, at every stage, bwd ticks must DESCEND in
@@ -324,9 +445,26 @@ class OneFOneB(StageAssignment):
         for s in {s for _, s in when_b}:
             for d in range(len(items) // M):
                 ticks = [when_b[(d * M + m, s)][0] for m in range(M)]
-                assert ticks == sorted(ticks, reverse=True), (
-                    f"stage {s} microbatch {d}: bwd ticks {ticks} not "
-                    f"slice-descending; cache cotangents incomplete")
+                if ticks != sorted(ticks, reverse=True):
+                    raise ScheduleValidationError(
+                        f"stage {s} microbatch {d}: bwd ticks {ticks} not "
+                        f"slice-descending; cache cotangents incomplete")
+
+
+@dataclasses.dataclass(frozen=True)
+class InterleavedOneFOneB(OneFOneB):
+    """Skew-buffered interleaved 1F1B (V ≥ 2): the 1F1B unit ordering over V
+    round-robin layer chunks per rank.  Pure IR — the unified executor runs
+    it with no schedule-specific code, holding the wrap-around chunk
+    handoffs K ticks in the skew buffers its :meth:`comm_plan` declares.
+    Combines interleaving's ~V× smaller fill/drain bubble with 1F1B's
+    flat-in-D live-activation bound."""
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.virtual_stages >= 2, (
+            "interleaved 1F1B needs V >= 2 virtual stages; use OneFOneB "
+            "(schedule='1f1b') for the V=1 table")
 
 
 def contiguous(n_ranks: int, n_layers: int) -> StageAssignment:
@@ -348,6 +486,13 @@ def one_f_one_b(n_ranks: int, n_layers: int,
     return OneFOneB(n_ranks, 1, n_layers, n_microbatches)
 
 
+def interleaved_one_f_one_b(n_ranks: int, virtual_stages: int, n_layers: int,
+                            n_microbatches: int = 1) -> InterleavedOneFOneB:
+    """Skew-buffered interleaved 1F1B (explicit bwd units; V>=2)."""
+    return InterleavedOneFOneB(n_ranks, virtual_stages, n_layers,
+                               n_microbatches)
+
+
 def interleave_stacked(a, assign: StageAssignment):
     """Reorder a padded stage-major stacked array (leading axis ``n_padded``)
     into rank-major chunk order; equals ``a[assign.param_permutation()]`` but
@@ -357,4 +502,15 @@ def interleave_stacked(a, assign: StageAssignment):
     s = a.shape
     assert s[0] == assign.n_padded, (s, assign)
     return a.reshape((V, K, b) + s[1:]).swapaxes(0, 1).reshape(
+        (assign.n_padded,) + s[1:])
+
+
+def uninterleave_stacked(a, assign: StageAssignment):
+    """Inverse of :func:`interleave_stacked`: rank-major chunk order back to
+    the stage-major (layer-order) stack — the executor's explicit stage
+    grads come out rank-major and must be returned in layer order."""
+    K, V, b = assign.n_ranks, assign.virtual_stages, assign.blocks_per_chunk
+    s = a.shape
+    assert s[0] == assign.n_padded, (s, assign)
+    return a.reshape((K, V, b) + s[1:]).swapaxes(0, 1).reshape(
         (assign.n_padded,) + s[1:])

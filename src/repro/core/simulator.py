@@ -1,26 +1,38 @@
 """Event-driven pipeline latency simulator.
 
-Evaluates a :class:`SlicingScheme` on a K-stage pipeline under a cost model,
-in three execution disciplines:
+Evaluates a :class:`SlicingScheme` on a K-stage pipeline under a cost model.
+Two engines:
 
 * ``async`` — GPU-style (the paper's): each stage starts a work item as soon
   as its input arrives and the stage is free.  Reproduces Eq. 5 exactly for
   a single batch split: T = Σ t_i + (K-1) max t_i.
-* ``lockstep`` — TPU SPMD-style: all stages advance tick-by-tick (ppermute is
-  a global collective), so tick duration = max over active stage work.
-* ``interleaved`` — lockstep with V virtual stages per rank (the schedule IR
-  in ``core/schedules``): each work item traverses the ring V times in
-  chunk-sized (1/V) units, so fill/drain ticks cost 1/V of a full stage and
-  the bubble shrinks by ~V.  Requires the work-item count divisible by K.
-* ``1f1b`` — lockstep with explicit bwd units (``schedules.OneFOneB``):
-  fwd and bwd ticks interleave 1F1B-style, bounding live activations by the
-  pipeline depth instead of the work-item count.  Tick COUNT matches the
-  contiguous fwd+bwd program up to a 2(M-1) per-microbatch bwd turnaround,
-  but lockstep tick DURATION is the max over ranks — and 1F1B mixes fwd and
-  bwd units within every steady-state tick (rank parity), so with
-  bwd ≈ 2·fwd every such tick costs a bwd: the memory bound is paid with a
-  latency premium the simulator reports honestly.  Implies fwd+bwd
-  (``include_backward=True`` required); requires uniform splits.
+* **table-driven lockstep** — TPU SPMD-style: all stages advance
+  tick-by-tick (ppermute is a global collective), so tick duration = max
+  over active ranks of the unit cost.  EVERY lockstep discipline is priced
+  from the SAME schedule-IR tick table the executor interprets
+  (``core/schedules``): build the discipline's :class:`StageAssignment`,
+  read its ``tick_table``, charge ``t_item/V`` per fwd chunk unit and
+  ``t_bwd/V`` per bwd unit, and sum per-tick maxima.  Registered lockstep
+  disciplines:
+
+  - ``lockstep`` — the contiguous (V=1) fwd table;
+  - ``interleaved`` — V virtual stages per rank: fill/drain ticks cost 1/V
+    of a full stage, the bubble shrinks ~V×;
+  - ``1f1b`` — explicit bwd units (``schedules.OneFOneB``): tick COUNT
+    matches the contiguous fwd+bwd program up to a 2(M-1) per-microbatch
+    bwd turnaround, but 1F1B mixes fwd and bwd units within every
+    steady-state tick (rank parity), so with bwd ≈ 2·fwd every such tick
+    costs a bwd — the memory bound is paid with a latency premium the
+    simulator reports honestly.  Implies fwd+bwd
+    (``include_backward=True`` required); requires uniform splits.
+  - ``interleaved-1f1b`` — the skew-buffered interleaved 1F1B table
+    (``schedules.InterleavedOneFOneB``): the same parity mix, but
+    chunk-sized (1/V) fill/drain — a strictly smaller bubble fraction than
+    plain 1f1b on the same scheme.
+
+Backward units default to ``BWD_COST_FACTOR ×`` their item's forward;
+pass ``t_bwd_of`` (e.g. a measured ``CostModel.t_bwd``) to price them from
+the fused-kernel cost model instead.
 
 Supports per-stage slowdown factors (straggler studies / DP-based
 re-planning) and fwd+bwd symmetric simulation.
@@ -33,7 +45,7 @@ import numpy as np
 
 from .cost_model import CostModel
 from .schedule import SlicingScheme
-from .schedules import OneFOneB, StageAssignment
+from .schedules import StageAssignment, get_schedule
 
 #: bwd ≈ 2·fwd (two matmuls per fwd matmul), the convention _work_items uses
 BWD_COST_FACTOR = 2.0
@@ -56,6 +68,22 @@ def _work_items(scheme: SlicingScheme, t_of, include_backward: bool):
     return items
 
 
+def _bwd_work_items(scheme: SlicingScheme, t_bwd_of) -> Optional[list]:
+    """Per-item BACKWARD-unit durations in fwd item order (for the explicit
+    bwd tables), from a ``t_bwd_of(b, l, ctx)`` callable — e.g. a measured
+    ``CostModel.t_bwd`` wrapped per batch; None keeps the
+    ``BWD_COST_FACTOR`` convention."""
+    if t_bwd_of is None:
+        return None
+    items = []
+    for b, ls in scheme.splits:
+        ctx = 0
+        for l in ls:
+            items.append(t_bwd_of(b, l, ctx))
+            ctx += l
+    return items
+
+
 def _async_total(items, K: int, slow) -> float:
     """Async (GPU-style) finish time of the flattened work-item durations."""
     M = len(items)
@@ -71,7 +99,7 @@ def _async_total(items, K: int, slow) -> float:
 
 def _lockstep_loop(items, K: int, slow) -> float:
     """Scalar-loop reference for the lockstep discipline (pre-vectorization);
-    kept for differential testing against :func:`_lockstep_total`."""
+    kept for differential testing against the table pricer."""
     M = len(items)
     total = 0.0
     for t in range(M + K - 1):
@@ -80,49 +108,45 @@ def _lockstep_loop(items, K: int, slow) -> float:
     return float(total)
 
 
-def _lockstep_total(items, K: int, V: int, slow) -> float:
-    """Vectorized lockstep tick sum, generalized to V virtual stages.
-
-    Rank k's unit at tick t is ``u = t - k``; the schedule IR maps u to its
-    (work_item, chunk) and a chunk costs ``t_item / V`` (layer chunks are
-    1/V of a rank's stack).  Tick duration = max over active ranks; every
-    rank has at most one unit per tick by construction (StageAssignment).
-    One numpy broadcast over the whole (ticks, K) grid replaces the
-    O(ticks·K) interpreter loop (cf. ``dp._cost_matrix``).
-    """
+def _table_total(assign: StageAssignment, items, slow,
+                 bwd_items=None) -> float:
+    """Price ANY lockstep schedule from its tick table — the single engine
+    every table discipline goes through (the same
+    ``(tick, rank) -> (work_item, chunk, is_bwd)`` surface the executor
+    interprets).  A fwd unit of item i costs ``items[i]/V`` (layer chunks
+    are 1/V of a rank's stack); a bwd unit costs ``bwd_items[i]/V``
+    (default ``BWD_COST_FACTOR ×`` fwd).  Tick duration = max over active
+    ranks; one numpy broadcast over the whole (ticks, K) grid replaces an
+    O(ticks·K) interpreter loop (cf. ``dp._cost_matrix``)."""
     items = np.asarray(items, np.float64)
-    assign = StageAssignment(n_ranks=K, virtual_stages=V, n_layers=1)
-    n_units = assign.n_units(items.size)        # asserts divisibility for V>1
-    u = np.arange(n_units + K - 1)[:, None] - np.arange(K)[None, :]
-    valid = (u >= 0) & (u < n_units)
-    i, _, _ = assign.unit_index(np.clip(u, 0, n_units - 1))
-    dur = np.where(valid, items[i] * (np.asarray(slow)[None, :] / V), 0.0)
-    return float(dur.max(axis=1).sum())
-
-
-def _one_f_one_b_total(fwd_items, K: int, n_microbatches: int, slow) -> float:
-    """Lockstep tick sum over the 1F1B fwd+bwd table (schedules.OneFOneB).
-
-    ``fwd_items`` are the FORWARD durations in work-item order; bwd units
-    cost ``BWD_COST_FACTOR`` times their item's fwd.  Tick duration is the
-    max over active ranks — the fwd/bwd rank-parity mix is priced in."""
-    items = np.asarray(fwd_items, np.float64)
-    assign = OneFOneB(n_ranks=K, virtual_stages=1, n_layers=1,
-                      n_microbatches=n_microbatches)
+    V = assign.virtual_stages
     tab = assign.tick_table(items.size)
     i, bwd = tab[..., 0], tab[..., 2]
-    kind = np.where(bwd == 1, BWD_COST_FACTOR, 1.0)
+    ic = np.clip(i, 0, items.size - 1)
+    f = items[ic]
+    b = (f * BWD_COST_FACTOR if bwd_items is None
+         else np.asarray(bwd_items, np.float64)[ic])
     dur = np.where(i >= 0,
-                   items[np.clip(i, 0, items.size - 1)] * kind
-                   * np.asarray(slow)[None, :], 0.0)
+                   np.where(bwd == 1, b, f) * (np.asarray(slow)[None, :] / V),
+                   0.0)
     return float(dur.max(axis=1).sum())
+
+
+def _lockstep_total(items, K: int, V: int, slow) -> float:
+    """Back-compat shim: the fwd-only (contiguous / interleaved) table."""
+    return _table_total(StageAssignment(n_ranks=K, virtual_stages=V,
+                                        n_layers=1), items, slow)
 
 
 def _discipline_total(items, K: int, discipline: str, virtual_stages: int,
-                      slow, n_microbatches: int = 1) -> float:
+                      slow, n_microbatches: int = 1,
+                      bwd_items=None) -> float:
     """Dispatch flattened work-item durations to one discipline engine —
-    the single place a new discipline gets wired in.  For ``1f1b``,
-    ``items`` must be the fwd-only durations (the bwd table is explicit)."""
+    the single place a new discipline gets wired in.  Table disciplines
+    build their schedule-IR assignment (the registry factories in
+    ``core/schedules``) and price its tick table.  For the explicit-bwd
+    disciplines, ``items`` must be the fwd-only durations (the bwd table is
+    explicit; ``bwd_items`` optionally prices the bwd units)."""
     if discipline == "async":
         assert virtual_stages == 1, \
             "async discipline models the contiguous (V=1) schedule only"
@@ -133,37 +157,46 @@ def _discipline_total(items, K: int, discipline: str, virtual_stages: int,
         return _lockstep_total(items, K, 1, slow)
     if discipline == "interleaved":
         return _lockstep_total(items, K, virtual_stages, slow)
-    if discipline == "1f1b":
-        assert virtual_stages == 1, \
-            "1F1B is a V=1 schedule (see schedules.OneFOneB)"
-        return _one_f_one_b_total(items, K, n_microbatches, slow)
+    if discipline in ("1f1b", "interleaved-1f1b"):
+        assign = get_schedule(discipline, n_ranks=K, n_layers=1,
+                              virtual_stages=virtual_stages,
+                              n_microbatches=n_microbatches)
+        return _table_total(assign, items, slow, bwd_items=bwd_items)
     raise ValueError(discipline)
 
 
 def _one_f_one_b_groups(scheme: SlicingScheme) -> int:
-    """Microbatch count D for the 1F1B table; requires uniform slice counts
+    """Microbatch count D for the 1F1B tables; requires uniform slice counts
     (the per-microbatch bwd turnaround is a single M in the timing)."""
     counts = [len(ls) for _, ls in scheme.splits]
     assert len(set(counts)) == 1, (
-        f"1f1b discipline needs a uniform slice count per split, got {counts}")
+        f"1f1b disciplines need a uniform slice count per split, "
+        f"got {counts}")
     return len(counts)
 
 
 def simulate(scheme: SlicingScheme, K: int, t_of, *,
              discipline: str = "async", include_backward: bool = False,
              stage_slowdown: Optional[Sequence[float]] = None,
-             virtual_stages: int = 1) -> float:
-    """t_of(b, l, ctx) -> seconds for one stage.  Returns total latency."""
+             virtual_stages: int = 1, t_bwd_of=None) -> float:
+    """t_of(b, l, ctx) -> seconds for one stage.  Returns total latency.
+    ``t_bwd_of(b, l, ctx)`` (explicit-bwd disciplines only) prices backward
+    units from a real cost model (``CostModel.t_bwd``) instead of the
+    ``BWD_COST_FACTOR`` convention."""
     slow = np.ones(K) if stage_slowdown is None else np.asarray(stage_slowdown)
     assert len(slow) == K
-    if discipline == "1f1b":
-        # the 1F1B table IS the fwd+bwd program; bwd costs are applied per
-        # unit inside the engine, not by appending reversed items
+    if discipline in ("1f1b", "interleaved-1f1b"):
+        # the explicit-bwd tables ARE the fwd+bwd program; bwd costs are
+        # applied per unit inside the engine, not by appending reversed items
         assert include_backward, \
-            "1f1b is inherently fwd+bwd; pass include_backward=True"
+            f"{discipline} is inherently fwd+bwd; pass include_backward=True"
         items = _work_items(scheme, t_of, include_backward=False)
         return _discipline_total(items, K, discipline, virtual_stages, slow,
-                                 n_microbatches=_one_f_one_b_groups(scheme))
+                                 n_microbatches=_one_f_one_b_groups(scheme),
+                                 bwd_items=_bwd_work_items(scheme, t_bwd_of))
+    assert t_bwd_of is None, \
+        "t_bwd_of prices explicit bwd units; only the 1f1b-family " \
+        "disciplines schedule them"
     items = _work_items(scheme, t_of, include_backward)
     return _discipline_total(items, K, discipline, virtual_stages, slow)
 
@@ -171,7 +204,8 @@ def simulate(scheme: SlicingScheme, K: int, t_of, *,
 def bubble_fraction(scheme: SlicingScheme, K: int, t_of, *,
                     discipline: str = "lockstep", virtual_stages: int = 1,
                     include_backward: bool = False,
-                    stage_slowdown: Optional[Sequence[float]] = None) -> float:
+                    stage_slowdown: Optional[Sequence[float]] = None,
+                    t_bwd_of=None) -> float:
     """Fraction of the step spent idle in fill/drain: (T - T_work) / T.
 
     T_work = Σ_i t_i scaled by the slowest rank — the busy time of a rank
@@ -182,13 +216,17 @@ def bubble_fraction(scheme: SlicingScheme, K: int, t_of, *,
     # measured cost model; going through simulate() would evaluate it a
     # second time per work item
     slow = np.ones(K) if stage_slowdown is None else np.asarray(stage_slowdown)
-    if discipline == "1f1b":
+    if discipline in ("1f1b", "interleaved-1f1b"):
         assert include_backward, \
-            "1f1b is inherently fwd+bwd; pass include_backward=True"
+            f"{discipline} is inherently fwd+bwd; pass include_backward=True"
         items = _work_items(scheme, t_of, include_backward=False)
+        bwd_items = _bwd_work_items(scheme, t_bwd_of)
         T = _discipline_total(items, K, discipline, virtual_stages, slow,
-                              n_microbatches=_one_f_one_b_groups(scheme))
-        work = float(np.sum(items)) * (1.0 + BWD_COST_FACTOR) * float(np.max(slow))
+                              n_microbatches=_one_f_one_b_groups(scheme),
+                              bwd_items=bwd_items)
+        bwd_sum = (float(np.sum(items)) * BWD_COST_FACTOR
+                   if bwd_items is None else float(np.sum(bwd_items)))
+        work = (float(np.sum(items)) + bwd_sum) * float(np.max(slow))
         return (T - work) / T
     items = _work_items(scheme, t_of, include_backward)
     T = _discipline_total(items, K, discipline, virtual_stages, slow)

@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.compat import cost_analysis_dict, use_mesh
 from repro.configs import ARCHS, SHAPES, get_config, input_specs, skip_reason
+from repro.core.schedules import (REGISTRY, check_virtual_stages,
+                                  schedule_help, schedule_names)
 from repro.launch import hlo_analysis as ha
 from repro.launch import hlo_tripcount as hlo_trip
 from repro.launch.mesh import make_production_mesh, make_terapipe_mesh, data_axes
@@ -220,9 +222,9 @@ def _lower_terapipe(model, shape, multi_pod, n_slices, n_pipe,
     tp = mesh.shape.get("tp", 1)
     if virtual_stages > 1 and schedule == "contiguous":
         schedule = "interleaved"     # back-compat: V>1 implies interleaving
-    if schedule == "1f1b" and tp > 1:
+    if REGISTRY[schedule].has_backward and tp > 1:
         raise NotImplementedError(
-            f"--schedule 1f1b needs a TP-free pipe mesh; pipe={n_pipe} "
+            f"--schedule {schedule} needs a TP-free pipe mesh; pipe={n_pipe} "
             f"leaves tp={tp} (pick --terapipe-pipe 16)")
 
     slice_lens = None
@@ -362,9 +364,9 @@ def main():
     ap.add_argument("--terapipe-slices", type=int, default=4)
     ap.add_argument("--terapipe-pipe", type=int, default=16)
     ap.add_argument("--schedule", default="contiguous",
-                    choices=["contiguous", "interleaved", "1f1b"],
-                    help="pipeline schedule (core/schedules; terapipe mode "
-                    "only): 1f1b = memory-bounded explicit-backward table")
+                    choices=list(schedule_names()),
+                    help="pipeline schedule (core/schedules registry; "
+                    "terapipe mode only): " + schedule_help())
     ap.add_argument("--virtual-stages", type=int, default=1,
                     help="V layer chunks per pipeline rank (interleaved "
                     "schedule; terapipe mode only)")
@@ -386,11 +388,14 @@ def main():
                     help="with --compare-executors: also compile both")
     args = ap.parse_args()
     # validate up front: an invalid combination must not run (and, worse,
-    # write its failure record under another schedule's cell tag)
-    if args.schedule == "interleaved" and args.virtual_stages < 2:
-        ap.error("--schedule interleaved needs --virtual-stages >= 2")
-    if args.schedule == "1f1b" and args.virtual_stages != 1:
-        ap.error("--schedule 1f1b is a V=1 schedule (see core/schedules)")
+    # write its failure record under another schedule's cell tag).  The
+    # per-schedule V rules come from the registry.
+    sched_eff = ("interleaved" if args.schedule == "contiguous"
+                 and args.virtual_stages > 1 else args.schedule)
+    try:
+        check_virtual_stages(sched_eff, args.virtual_stages)
+    except ValueError as e:
+        ap.error(str(e))
 
     if args.compare_executors:
         rec = compare_executors(

@@ -37,6 +37,8 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.compat import make_mesh, use_mesh
 from repro.configs import get_config
+from repro.core.schedules import (check_virtual_stages, schedule_help,
+                                  schedule_names)
 from repro.data.pipeline import DataPipeline, SyntheticSource
 from repro.models import build_model
 from repro.optim.adamw import adamw, apply_updates, cosine_schedule
@@ -58,22 +60,28 @@ def build_value_and_grad(model, specs, mesh, args):
     if args.mode == "terapipe" and args.dp_plan:
         # Algorithm 1 end-to-end: plan the slicing with the DP, execute it
         from repro.core.cost_model import AnalyticCostModel, TPU_V5E
-        from repro.core.dp import ensure_executable, optimal_slicing
+        from repro.core.dp import (ensure_executable, optimal_slicing,
+                                   plan_schedule_info)
         K = mesh.shape["pipe"]
         cm = AnalyticCostModel(model.cfg, TPU_V5E,
                                layers_per_stage=max(1, model.n_blocks // K))
         g = max(1, args.seq // 16)
         plan = optimal_slicing(cm, args.seq, K, granularity=g,
                                virtual_stages=args.virtual_stages)
-        # schedule-aware executability post-pass (e.g. interleaved needs
-        # D*M % K == 0; splitting the largest slices never raises t_max)
+        # schedule-aware executability post-pass (e.g. the interleaved
+        # schedules need D*M % K == 0; splitting the largest slices never
+        # raises t_max)
         slices = ensure_executable(plan.slices, schedule=schedule,
                                    n_ranks=K,
                                    n_microbatches=args.microbatches,
                                    granularity=g)
         slice_lens = tuple(slices)
+        info = plan_schedule_info(slice_lens, schedule=schedule, n_ranks=K,
+                                  virtual_stages=args.virtual_stages,
+                                  n_microbatches=args.microbatches)
         print(f"[dp-plan] slices {list(slice_lens)} "
-              f"(predicted {plan.latency*1e3:.1f} ms/iter)")
+              f"(predicted {plan.latency*1e3:.1f} ms/iter; "
+              + " ".join(f"{k}={v}" for k, v in info.items()) + ")")
     tcfg = TeraPipeConfig(
         n_token_slices=args.token_slices if args.mode == "terapipe" else 1,
         slice_lens=slice_lens,
@@ -105,11 +113,10 @@ def main(argv=None):
                     help="plan slice lengths with the paper's DP (Alg. 1)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--schedule", default="contiguous",
-                    choices=["contiguous", "interleaved", "1f1b"],
-                    help="pipeline schedule (core/schedules): contiguous = "
-                    "the paper's TeraPipe table; interleaved = Megatron "
-                    "virtual stages (set --virtual-stages); 1f1b = memory-"
-                    "bounded explicit-backward table")
+                    choices=list(schedule_names()),
+                    help="pipeline schedule (core/schedules registry — new "
+                    "schedules appear here automatically): "
+                    + schedule_help())
     ap.add_argument("--virtual-stages", type=int, default=1,
                     help="V layer chunks per pipeline rank (interleaved "
                     "schedule; V>1 implies --schedule interleaved). Needs "
@@ -131,10 +138,14 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.schedule == "interleaved" and args.virtual_stages < 2:
-        ap.error("--schedule interleaved needs --virtual-stages >= 2")
-    if args.schedule == "1f1b" and args.virtual_stages != 1:
-        ap.error("--schedule 1f1b is a V=1 schedule (see core/schedules)")
+    # validate (schedule, V) against the registry's per-schedule rules,
+    # AFTER the back-compat promotion (V>1 under contiguous = interleaved)
+    sched_eff = ("interleaved" if args.schedule == "contiguous"
+                 and args.virtual_stages > 1 else args.schedule)
+    try:
+        check_virtual_stages(sched_eff, args.virtual_stages)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.use_kernel:

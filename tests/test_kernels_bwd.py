@@ -4,8 +4,9 @@ Gradchecks run the WHOLE custom_vjp (fwd saves (O, lse); bwd runs the dQ and
 dK/dV kernels) against jax.vjp of the dense reference, in interpret mode,
 across GQA ratios, ragged non-128-multiple slice lengths, ctx=0 / ctx>0 and
 fp32/bf16 — plus traced-ctx equivalence (the scalar-prefetch operand the
-pipeline executors drive) and an end-to-end check that the contiguous and
-1F1B executors with ``use_kernel=True`` reproduce the reference loss+grads.
+pipeline executor drives) and an end-to-end check that the unified executor
+under every registered schedule with ``use_kernel=True`` reproduces the
+reference loss+grads.
 """
 import jax
 import jax.numpy as jnp
@@ -102,9 +103,10 @@ def test_custom_vjp_closure_is_cached():
 
 
 def test_executors_with_kernel_match_reference():
-    """Both pipeline executors (contiguous autodiff + 1F1B explicit-bwd)
-    with ``use_kernel=True`` route attention through the traced-ctx Pallas
-    kernels (attn_sliced_dyn) and reproduce the reference loss AND grads —
+    """The unified executor under EVERY registered schedule (autodiff-bwd
+    contiguous/interleaved + explicit-bwd 1f1b/interleaved-1f1b) with
+    ``use_kernel=True`` routes attention through the traced-ctx Pallas
+    kernels (attn_sliced_dyn) and reproduces the reference loss AND grads —
     K=2 and K=4, uniform and non-uniform slices, GQA heads."""
     out = _run_subprocess(devices=4, code="""
         import jax, jax.numpy as jnp
@@ -128,7 +130,8 @@ def test_executors_with_kernel_match_reference():
         gref = jax.grad(model.loss)(params, batch)
         for K in (2, 4):
             mesh = make_mesh((1, K), ("data", "pipe"))
-            for sched in ("contiguous", "1f1b"):
+            for sched, V in (("contiguous", 1), ("interleaved", 2),
+                             ("1f1b", 1), ("interleaved-1f1b", 2)):
                 for desc, kw in [("uniform", dict(n_token_slices=4)),
                                  ("nonuniform",
                                   dict(slice_lens=(12, 8, 8, 4)))]:
@@ -136,6 +139,7 @@ def test_executors_with_kernel_match_reference():
                                           data_axes=("data",),
                                           cache_dtype=jnp.float32,
                                           schedule=sched, use_kernel=True,
+                                          virtual_stages=V,
                                           **kw)
                     with use_mesh(mesh):
                         vg, _ = make_terapipe_value_and_grad(

@@ -1,11 +1,17 @@
 """Schedule IR (core/schedules): placement, tick geometry, bubble math,
-fwd+bwd unit-kind tables (1F1B) and the live-residual audits."""
+fwd+bwd unit-kind tables (1F1B family), comm plans / skew holds, the
+live-residual audits, and the name->factory registry."""
 import numpy as np
 import pytest
 
-from repro.core.schedules import (OneFOneB, StageAssignment, contiguous,
-                                  interleaved, interleave_stacked,
-                                  one_f_one_b)
+from repro.core.schedules import (REGISTRY, InterleavedOneFOneB, OneFOneB,
+                                  ScheduleValidationError, StageAssignment,
+                                  check_virtual_stages, contiguous,
+                                  get_schedule, interleaved,
+                                  interleave_stacked,
+                                  interleaved_one_f_one_b, one_f_one_b,
+                                  schedule_help, schedule_names,
+                                  uninterleave_stacked)
 from repro.core.schedule import SlicingScheme
 from repro.core.simulator import (BWD_COST_FACTOR, bubble_fraction, simulate)
 
@@ -176,9 +182,124 @@ def test_residual_spread_bounds_ring_buffer():
             assert one_f_one_b(K, 24, DD).residual_spread(DD * M) == cap
 
 
-def test_one_f_one_b_rejects_interleaving():
+IL_GRID = [(K, V, D, M) for K in (1, 2, 3, 4, 8) for V in (2, 3)
+           for D in (1, 2, 4) for M in (1, 2, 4) if (D * M) % K == 0]
+
+
+@pytest.mark.parametrize("K,V,D,M", IL_GRID)
+def test_interleaved_one_f_one_b_table_valid(K, V, D, M):
+    """The skew-buffered interleaved-1F1B table (IR-only schedule): every
+    fwd AND bwd unit exactly once per (item, chunk, stage); in-ring deps
+    delivered one tick after their producer, wrap-around chunk handoffs
+    exactly ``1 + K`` ticks after (one hop + the K-tick skew hold the comm
+    plan declares); bwds after their own fwd, slice-descending within each
+    microbatch at every stage."""
+    N = D * M
+    a = interleaved_one_f_one_b(K, V, 24, D)
+    assert a.has_backward
+    assert a.validate(N)
+    assert a.n_units(N) == 2 * N * V
+    plan = a.comm_plan()
+    assert plan.fwd_ring and plan.rev_ring
+    assert plan.fwd_hold == plan.rev_hold == K
+    # V=1 reduces exactly to the plain OneFOneB closed forms
+    b = one_f_one_b(K, 24, D)
+    assert b.comm_plan().fwd_hold == 0
+    assert b.n_ticks(N) == 2 * N + 2 * M + 2 * K - 4
+
+
+def test_interleaved_one_f_one_b_residual_spread_flat_in_D():
+    """The per-chunk ring-buffer depth (what the executor allocates V× per
+    rank) is collision-free under ``item % spread`` per chunk and saturates
+    independent of the microbatch count D."""
+    for K, V, M in [(2, 2, 2), (4, 2, 4), (3, 2, 3)]:
+        spreads = []
+        for D in (4, 8, 16):
+            N = D * M
+            if N % K:
+                continue
+            a = interleaved_one_f_one_b(K, V, 24, D)
+            R = a.residual_spread(N)
+            tab = a.tick_table(N)
+            for k in range(K):
+                live = {}
+                for t in range(tab.shape[0]):
+                    i, v, bwd = (int(x) for x in tab[t, k])
+                    if i < 0:
+                        continue
+                    lv = live.setdefault(v, set())
+                    if bwd:
+                        lv.discard(i)
+                    else:
+                        assert i % R not in {j % R for j in lv}, (K, V, D, k)
+                        lv.add(i)
+            spreads.append(R)
+        assert len(set(spreads)) == 1, (K, V, M, spreads)
+
+
+def test_interleaved_one_f_one_b_requires_v2():
     with pytest.raises(AssertionError):
-        OneFOneB(n_ranks=4, virtual_stages=2, n_layers=8, n_microbatches=1)
+        InterleavedOneFOneB(n_ranks=4, virtual_stages=1, n_layers=8,
+                            n_microbatches=1)
+
+
+def test_validate_error_names_offender_and_expected_source():
+    """Satellite bugfix: a failing audit raises ScheduleValidationError
+    naming the first offending (tick, rank, unit) AND the expected source
+    rank/tick — not a bare assert."""
+    class Skewed(OneFOneB):
+        """Corrupt table: shift rank 1's units one tick late."""
+        def tick_table(self, n_items):
+            tab = super().tick_table(n_items)
+            K = self.n_ranks
+            bad = np.full_like(tab, -1)
+            bad[:, 0] = tab[:, 0]
+            bad[1:, 1] = tab[:-1, 1]
+            return bad
+
+    a = Skewed(2, 1, 4, 1)
+    with pytest.raises(ScheduleValidationError) as e:
+        a.validate(4)
+    msg = str(e.value)
+    assert "tick=" in msg and "rank=" in msg and "item=" in msg, msg
+    assert "expected" in msg and "predecessor rank" in msg, msg
+    # duplicates are named with both colliding (tick, rank) slots
+    class Dup(StageAssignment):
+        def tick_table(self, n_items):
+            tab = super().tick_table(n_items)
+            tab[2] = tab[1]
+            return tab
+    with pytest.raises(ScheduleValidationError, match="scheduled twice"):
+        Dup(2, 1, 4).validate(4)
+
+
+def test_schedule_registry_drives_everything():
+    """Satellite: the registry is the single source of schedule names; every
+    entry builds via get_schedule, validates, and enforces its V rules."""
+    names = schedule_names()
+    assert set(names) >= {"contiguous", "interleaved", "1f1b",
+                          "interleaved-1f1b"}
+    assert all(n in schedule_help() for n in names)
+    for name, spec in REGISTRY.items():
+        V = max(spec.min_virtual, 2 if spec.min_virtual > 1 else 1)
+        a = get_schedule(name, n_ranks=2, n_layers=8, virtual_stages=V,
+                         n_microbatches=2)
+        assert a.has_backward == spec.has_backward
+        assert a.validate(4)
+    with pytest.raises(ValueError, match="unknown schedule"):
+        get_schedule("chimera", n_ranks=2, n_layers=8)
+    with pytest.raises(ValueError, match="virtual-stages >= 2"):
+        check_virtual_stages("interleaved-1f1b", 1)
+    with pytest.raises(ValueError, match="V=1 schedule"):
+        check_virtual_stages("1f1b", 2)
+
+
+def test_uninterleave_inverts_interleave():
+    for a in (interleaved(4, 2, 24), interleaved_one_f_one_b(3, 2, 12, 2),
+              contiguous(4, 8)):
+        x = np.arange(a.n_padded * 5).reshape(a.n_padded, 5)
+        np.testing.assert_array_equal(
+            uninterleave_stacked(interleave_stacked(x, a), a), x)
 
 
 def test_simulator_one_f_one_b_discipline():

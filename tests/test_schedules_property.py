@@ -1,0 +1,86 @@
+"""Hypothesis property tests over the schedule registry: every registered
+schedule's tick table validates across a (K, V, M, D) grid, and the
+``peak_live_items()`` audit equals an independent brute-force live-residual
+replay of ``tick_table()`` (sets of (item, chunk) born at fwd ticks and
+retired at bwd ticks — or held to the drain for fwd-only tables).
+
+Degrades to SKIP (never a collection error) when hypothesis is not
+installed — see tests/_hyp.py."""
+import numpy as np
+import pytest
+
+from _hyp import HAS_HYPOTHESIS, given, settings, st  # noqa: F401
+
+from repro.core.schedules import (REGISTRY, ScheduleValidationError,
+                                  get_schedule)
+
+KS = (1, 2, 3, 4, 8)
+VS = (1, 2, 3, 4)
+DS = (1, 2, 3, 4)
+MS = (1, 2, 3, 4)
+
+
+def _build(name, K, V, D, M):
+    """Clamp the drawn (K, V, D, M) onto the schedule's legal region, or
+    return None when no legal V exists for the draw."""
+    spec = REGISTRY[name]
+    if V < spec.min_virtual:
+        V = spec.min_virtual
+    if spec.max_virtual is not None and V > spec.max_virtual:
+        V = spec.max_virtual
+    if V > 1 and (D * M) % K:
+        return None, None            # interleaved group-of-K constraint
+    return get_schedule(name, n_ranks=K, n_layers=24, virtual_stages=V,
+                        n_microbatches=D), D * M
+
+
+def _replay_peak_live(assign, n_items):
+    """Independent oracle for peak_live_items: replay the tick table per
+    rank, tracking the set of (item, chunk) residuals that are live —
+    born when their fwd runs, retired AFTER their bwd tick (fwd-only
+    tables retire nothing before the drain)."""
+    tab = assign.tick_table(n_items)
+    peak = 0
+    for k in range(assign.n_ranks):
+        live = set()
+        for t in range(tab.shape[0]):
+            i, v, bwd = (int(x) for x in tab[t, k])
+            retire = None
+            if i >= 0:
+                if bwd:
+                    assert (i, v) in live, (i, v, k, t)
+                    retire = (i, v)   # live THROUGH its own bwd tick
+                else:
+                    live.add((i, v))
+            peak = max(peak, len(live))
+            if retire is not None:
+                live.discard(retire)
+    return peak
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+@settings(max_examples=40, deadline=None)
+@given(K=st.sampled_from(KS), V=st.sampled_from(VS),
+       D=st.sampled_from(DS), M=st.sampled_from(MS))
+def test_registered_schedule_validates_and_peak_live_matches_replay(
+        name, K, V, D, M):
+    assign, n_items = _build(name, K, V, D, M)
+    if assign is None:
+        return
+    assert assign.validate(n_items) is True
+    assert assign.peak_live_items(n_items) == _replay_peak_live(assign,
+                                                                n_items)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_registered_schedule_smoke_grid(name):
+    """Plain-pytest fallback (runs even without hypothesis): one legal
+    corner per schedule validates and matches the replay oracle."""
+    for K, V, D, M in [(2, 2, 2, 2), (4, 2, 2, 4), (3, 3, 3, 1),
+                       (8, 2, 4, 2), (1, 2, 1, 3)]:
+        assign, n_items = _build(name, K, V, D, M)
+        if assign is None:
+            continue
+        assert assign.validate(n_items) is True
+        assert assign.peak_live_items(n_items) == _replay_peak_live(
+            assign, n_items)
