@@ -8,6 +8,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs import get_config                              # noqa: E402
 from repro.core.cost_model import AnalyticCostModel, V100_AWS     # noqa: E402
+from repro.core.schedules import (KIND_BWD, KIND_BWD_INPUT,       # noqa: E402
+                                  KIND_BWD_WEIGHT)
 from repro.core.dp import joint_batch_token, optimal_slicing      # noqa: E402
 from repro.core.schedule import SlicingScheme                     # noqa: E402
 from repro.core.simulator import simulate                         # noqa: E402
@@ -24,10 +26,11 @@ def cost_model_for(setting: Setting, batch: int = 1, seq_len: int = SEQ_LEN):
 
 def unit_cost_model_for(setting: Setting, batch: int = 1):
     """Per-UNIT pricers for the explicit-bwd (1F1B-family) disciplines:
-    ``(t_of, t_bwd_of)`` callables for simulate()/bubble_fraction(), built
-    on a fwd-only AnalyticCostModel so fwd and bwd units are priced
-    separately via ``CostModel.unit_cost`` (the schedule-IR unit-kind
-    form).  The single construction both interleave_bench and
+    ``(t_of, t_bwd_of, t_bwd_input_of, t_bwd_weight_of)`` callables for
+    simulate()/bubble_fraction(), built on a fwd-only AnalyticCostModel so
+    every unit KIND is priced separately via ``CostModel.unit_cost`` (the
+    schedule-IR typed-kind form): forward, fused backward, and the ZB B/W
+    split pair.  The single construction both interleave_bench and
     benchmarks/schedule_report use — the two surfaces must report the same
     metric."""
     cfg = get_config(setting.model)
@@ -35,7 +38,9 @@ def unit_cost_model_for(setting: Setting, batch: int = 1):
     cm = AnalyticCostModel(cfg, V100_AWS, layers_per_stage=lps, batch=batch,
                            tp_degree=setting.n_op, include_backward=False)
     return (lambda b, l, c: cm.unit_cost(l, c),
-            lambda b, l, c: cm.unit_cost(l, c, is_bwd=True))
+            lambda b, l, c: cm.unit_cost(l, c, kind=KIND_BWD),
+            lambda b, l, c: cm.unit_cost(l, c, kind=KIND_BWD_INPUT),
+            lambda b, l, c: cm.unit_cost(l, c, kind=KIND_BWD_WEIGHT))
 
 
 def latency_of_scheme(setting: Setting, scheme: SlicingScheme,

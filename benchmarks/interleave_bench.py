@@ -8,6 +8,9 @@ For V in {1, 2, 4} reports:
     vs skew-buffered interleaved-1f1b (V >= 2), priced from the same tick
     tables the unified executor interprets — interleaving must strictly
     shrink the 1F1B bubble too;
+  * the zero-bubble check: ZB-H1 (V=1, split B/W backward) must beat the
+    V=2 interleaved-1f1b bubble at the same setting — the zb-h1 acceptance
+    gate ``make bench-smoke`` runs;
   * trace+lower wall time of the rolled executor at each V (subprocess with
     forced host devices): the tick body gathers its chunk dynamically, so
     deeper interleaves cost ~nothing to trace.
@@ -75,7 +78,7 @@ def bubble_part(emit):
     # benchmarks/schedule_report.py, so the two surfaces report the same
     # metric.
     from benchmarks.common import unit_cost_model_for
-    t_of_u, t_bwd_of = unit_cost_model_for(s)
+    t_of_u, t_bwd_of, t_b_of, t_w_of = unit_cost_model_for(s)
     b1f1b = {}
     for V in VS:
         disc = "1f1b" if V == 1 else "interleaved-1f1b"
@@ -86,7 +89,36 @@ def bubble_part(emit):
              b1f1b[V] * 1e6, f"bubble_frac={b1f1b[V]:.4f}")
     assert b1f1b[2] < b1f1b[1], b1f1b
     assert b1f1b[4] < b1f1b[2], b1f1b
-    return frac, b1f1b
+
+    # zero-bubble ZB-H1 on the same scheme: splitting each fused bwd into B
+    # (reverse-ring cotangent) + W (deferred weight grads) lets W fill the
+    # drain.  Two acceptance gates:
+    #
+    # 1. Schedule GEOMETRY, both tables priced by the simulator's default
+    #    unit-kind convention (fwd = B = W = t_item, fused = 2·t_item) —
+    #    hardware-neutral, so the comparison isolates the tick-table shape:
+    #    ZB-H1 (V=1) must beat even the V=2 skew-buffered interleaved-1f1b
+    #    — the family's current best — and the V=4 ~0.527 floor.
+    # 2. Under the V100-AWS ANALYTIC pricer ZB-H1 must still beat plain
+    #    1f1b.  (It does not beat interleaved-1f1b there: that model's
+    #    slow-wire term makes B as expensive as a fused half-unit, and
+    #    interleaving amortizes fill/drain by 1/V — see EXPERIMENTS.md.)
+    zb_conv = bubble_fraction(scheme, K, t_of_u, discipline="zb-h1",
+                              virtual_stages=1, include_backward=True)
+    i1f1b_conv = {V: bubble_fraction(scheme, K, t_of_u,
+                                     discipline="interleaved-1f1b",
+                                     virtual_stages=V, include_backward=True)
+                  for V in (2, 4)}
+    zb_an = bubble_fraction(
+        scheme, K, t_of_u, discipline="zb-h1", virtual_stages=1,
+        include_backward=True, t_bwd_of=t_bwd_of, t_bwd_input_of=t_b_of,
+        t_bwd_weight_of=t_w_of)
+    emit(f"interleave/setting{s.idx}_{s.model}_K{K}_V1_zb-h1_bubble",
+         zb_an * 1e6, f"bubble_frac={zb_an:.4f} geometry={zb_conv:.4f}")
+    assert zb_conv < i1f1b_conv[2], (zb_conv, i1f1b_conv)
+    assert zb_conv < i1f1b_conv[4], (zb_conv, i1f1b_conv)
+    assert zb_an < b1f1b[1], (zb_an, b1f1b)
+    return frac, b1f1b, zb_an
 
 
 _TRACE_CODE = """

@@ -7,7 +7,9 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
 (bubble fraction, trace+lower seconds, compiled peak temp bytes for every
 registered schedule — see benchmarks/schedule_report.py) and writes it to
 ``BENCH_schedules.json`` at the repo root, so the perf trajectory is
-tracked across PRs by diffing one file.
+tracked across PRs by diffing one file.  Recollecting preserves the
+previous run's headline numbers in a ``history`` list keyed by git rev
+(and prints the diff against them) instead of clobbering the file.
 """
 import argparse
 import sys

@@ -16,7 +16,14 @@
   ratio: the flat-vs-linear-in-D memory signature per schedule.
 
 The JSON lands at the repo root so the perf trajectory of every schedule is
-tracked across PRs by diffing one file.
+tracked across PRs by diffing one file.  Re-collecting does NOT clobber
+that trajectory: the previous run's headline numbers (bubble fraction,
+trace-lower seconds, memory growth ratio) are folded into a bounded
+``history`` list keyed by git revision before the fresh cells are written,
+and the collector prints a per-schedule diff against the most recent
+previous entry — a regression shows up in the run log, not only in ``git
+diff``.  Re-runs at the SAME revision replace that revision's entry
+instead of stacking duplicates.
 """
 import json
 import os
@@ -33,6 +40,27 @@ DEFAULT_OUT = Path(__file__).resolve().parents[1] / "BENCH_schedules.json"
 
 #: V used for the interleaved schedules' cells
 REPORT_V = 2
+
+#: past runs kept in the JSON's ``history`` list (newest last)
+HISTORY_KEEP = 20
+
+#: per-schedule headline numbers preserved per past run
+_HISTORY_KEYS = ("bubble_fraction", "trace_lower_s", "temp_growth_D1toD4")
+
+
+def _git_rev() -> str:
+    try:
+        r = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                           cwd=Path(__file__).resolve().parents[1],
+                           capture_output=True, text=True, timeout=30)
+        return r.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _compact(schedules: dict) -> dict:
+    return {name: {k: cell[k] for k in _HISTORY_KEYS if k in cell}
+            for name, cell in schedules.items()}
 
 _TRACE_CODE = """
     import time
@@ -78,18 +106,21 @@ def _bubble(sched: str, V: int) -> float:
     from benchmarks.common import cost_model_for, unit_cost_model_for
     from benchmarks.paper_settings import TABLE1, SEQ_LEN
     from repro.core.schedule import SlicingScheme
+    from repro.core.schedules import REGISTRY
     from repro.core.simulator import bubble_fraction
 
     s = next(t for t in TABLE1 if t.idx == 8)
     scheme = SlicingScheme.uniform(SEQ_LEN, 6, n_token_slices=8, microbatch=1)
     disc = {"contiguous": "lockstep"}.get(sched, sched)
-    if "1f1b" in sched:
-        # explicit-bwd tables: fwd and bwd units priced separately via the
-        # SAME shared pricer interleave_bench asserts against
-        t_of, t_bwd_of = unit_cost_model_for(s)
+    if REGISTRY[sched].has_backward:
+        # explicit-bwd tables: every unit KIND priced separately via the
+        # SAME shared pricer interleave_bench asserts against (fused bwd
+        # for the 1f1b family, the B/W split pair for zb-h1)
+        t_of, t_bwd_of, t_b_of, t_w_of = unit_cost_model_for(s)
         return bubble_fraction(scheme, s.n_pipe, t_of, discipline=disc,
                                virtual_stages=V, include_backward=True,
-                               t_bwd_of=t_bwd_of)
+                               t_bwd_of=t_bwd_of, t_bwd_input_of=t_b_of,
+                               t_bwd_weight_of=t_w_of)
     cm = cost_model_for(s)
     return bubble_fraction(scheme, s.n_pipe, lambda b, l, c: cm(l, c),
                            discipline=disc, virtual_stages=V)
@@ -99,12 +130,32 @@ def collect(out_path: Path = DEFAULT_OUT) -> dict:
     from benchmarks import memory_bench
     from repro.core.schedules import REGISTRY
 
-    report = {"setting": {"bubble": "table1-setting8 K=48 N=48",
+    # previous run -> history entry (keyed by git rev) + diff baseline
+    prev = None
+    history = []
+    if out_path.exists():
+        try:
+            old = json.loads(out_path.read_text())
+            history = list(old.get("history", []))
+            if old.get("schedules"):
+                prev = {"rev": old.get("rev", "unknown"),
+                        "schedules": _compact(old["schedules"])}
+                history.append(prev)
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"[schedule-report] ignoring unreadable {out_path}: {e}",
+                  file=sys.stderr, flush=True)
+    rev = _git_rev()
+    # a re-collect at the same rev replaces that rev's entry, never stacks
+    history = [h for h in history if h.get("rev") != rev][-HISTORY_KEEP:]
+
+    report = {"rev": rev,
+              "setting": {"bubble": "table1-setting8 K=48 N=48",
                           "trace": "K=4 M=8 n_layers=8 loss+grad lower",
                           "memory": f"K={memory_bench.K} M={memory_bench.M} "
                                     f"seq={memory_bench.SEQ}",
                           "virtual_stages": REPORT_V},
-              "schedules": {}}
+              "schedules": {},
+              "history": history}
     for name, spec in REGISTRY.items():
         V = max(spec.min_virtual, REPORT_V if spec.min_virtual > 1 else 1)
         cell = {"virtual_stages": V, "has_backward": spec.has_backward}
@@ -121,8 +172,22 @@ def collect(out_path: Path = DEFAULT_OUT) -> dict:
               f"lower={cell['trace_lower_s']:.2f}s "
               f"temp_D4={temp['D4']/2**20:.2f}MiB "
               f"(x{cell['temp_growth_D1toD4']:.2f} over D)", flush=True)
+    if prev is not None:
+        for name, cell in report["schedules"].items():
+            p = prev["schedules"].get(name)
+            if not p or "bubble_fraction" not in p:
+                print(f"[schedule-report] {name}: new since {prev['rev']}",
+                      flush=True)
+                continue
+            db = cell["bubble_fraction"] - p["bubble_fraction"]
+            dg = cell["temp_growth_D1toD4"] - p.get("temp_growth_D1toD4", 0.0)
+            print(f"[schedule-report] {name} vs {prev['rev']}: "
+                  f"bubble {p['bubble_fraction']:.4f}->"
+                  f"{cell['bubble_fraction']:.4f} ({db:+.4f}) "
+                  f"temp_growth {dg:+.3f}", flush=True)
     out_path.write_text(json.dumps(report, indent=1) + "\n")
-    print(f"[schedule-report] wrote {out_path}", flush=True)
+    print(f"[schedule-report] wrote {out_path} "
+          f"(rev {rev}, {len(history)} history entries)", flush=True)
     return report
 
 

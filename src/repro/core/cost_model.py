@@ -24,6 +24,8 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.schedules import (KIND_BWD, KIND_BWD_INPUT, KIND_BWD_WEIGHT,
+                                  KIND_FWD)
 from repro.models.common import ModelConfig
 
 
@@ -81,8 +83,20 @@ def layer_matmul_flops(cfg: ModelConfig) -> float:
 #: dO·Vᵀ again and computes dSᵀ·Q and Pᵀ·dO.
 FLASH_BWD_ATTN_MULT = 3.5
 
+#: The ZB-H1 B/W split of that structure: the dQ pass (3 block matmuls,
+#: 1.5× fwd) prices with the input-grad B unit — dQ is on the input-
+#: cotangent path the reverse ring is waiting for — and the dK/dV pass
+#: (4 block matmuls, 2× fwd) with the deferred weight-grad W unit.  The two
+#: sum to FLASH_BWD_ATTN_MULT exactly, so B + W == the fused bwd.
+FLASH_BWD_DQ_MULT = 1.5
+FLASH_BWD_DKV_MULT = 2.0
+
 #: Parameter-matmul backward: dX and dW per forward matmul.
 MATMUL_BWD_MULT = 2.0
+#: ... split one-each between the B unit (dX: the input cotangent) and the
+#: W unit (dW: the parameter grad).
+MATMUL_BWD_INPUT_MULT = 1.0
+MATMUL_BWD_WEIGHT_MULT = 1.0
 
 
 def attention_context_flops(cfg: ModelConfig, l: int, ctx: int) -> float:
@@ -111,18 +125,40 @@ class CostModel:
         raise NotImplementedError
 
     def t_bwd(self, l: int, ctx: int) -> float:
-        """Backward-unit latency (the explicit-bwd 1F1B-family schedules
-        pay one inside every steady-state tick).  Default: the simulator's
-        bwd ≈ 2·fwd convention; models with real kernel knowledge
-        override."""
+        """FUSED backward-unit latency (the explicit-bwd 1F1B-family
+        schedules pay one inside every steady-state tick).  Default: the
+        simulator's bwd ≈ 2·fwd convention; models with real kernel
+        knowledge override."""
         return 2.0 * self.t_fwd(l, ctx)
 
-    def unit_cost(self, l: int, ctx: int, is_bwd: bool = False) -> float:
-        """Duration of one scheduled UNIT — the form the schedule-IR tick
-        tables distinguish (``is_bwd`` per unit) and the simulator's table
-        pricer consumes: fwd units cost :meth:`t_fwd`, explicit bwd units
-        :meth:`t_bwd`."""
-        return self.t_bwd(l, ctx) if is_bwd else self.t_fwd(l, ctx)
+    def t_bwd_input(self, l: int, ctx: int) -> float:
+        """B (input-cotangent) unit latency for split-backward schedules
+        (ZB-H1).  Default: ≈ the forward (the dX transposes mirror the
+        forward matmuls); always pairs with :meth:`t_bwd_weight` so that
+        B + W == the fused :meth:`t_bwd`."""
+        return self.t_fwd(l, ctx)
+
+    def t_bwd_weight(self, l: int, ctx: int) -> float:
+        """W (weight-grad) unit latency: the rest of the fused backward
+        after the B unit, by construction ``t_bwd - t_bwd_input`` so split
+        schedules pay exactly what fused ones do, just rearranged."""
+        return self.t_bwd(l, ctx) - self.t_bwd_input(l, ctx)
+
+    def unit_cost(self, l: int, ctx: int, kind: int = KIND_FWD) -> float:
+        """Duration of one scheduled UNIT by its typed kind — the schedule
+        IR tick tables' third column, and the form the simulator's table
+        pricer consumes: KIND_FWD -> :meth:`t_fwd`, fused KIND_BWD ->
+        :meth:`t_bwd`, split KIND_BWD_INPUT / KIND_BWD_WEIGHT ->
+        :meth:`t_bwd_input` / :meth:`t_bwd_weight` (which sum to t_bwd)."""
+        if kind == KIND_FWD:
+            return self.t_fwd(l, ctx)
+        if kind == KIND_BWD:
+            return self.t_bwd(l, ctx)
+        if kind == KIND_BWD_INPUT:
+            return self.t_bwd_input(l, ctx)
+        if kind == KIND_BWD_WEIGHT:
+            return self.t_bwd_weight(l, ctx)
+        raise ValueError(f"unit_cost: unpriceable unit kind {kind!r}")
 
     def __call__(self, l: int, ctx: int) -> float:
         return self.t_fwd(l, ctx)
@@ -142,7 +178,13 @@ class AnalyticCostModel(CostModel):
         # float: keeps the array path in t_fwd out of int64 accumulation
         self._matmul_per_tok = float(layer_matmul_flops(cfg) * layers_per_stage)
 
-    def _t(self, l, ctx, matmul_mult: float, attn_mult: float):
+    def _t(self, l, ctx, matmul_mult: float, attn_mult: float,
+           comm: float = 1.0):
+        """``comm`` scales the stage-boundary transfer term: 1 for units
+        that put a value on a ring (fwd activations, fused-bwd / B-unit
+        cotangents), 0 for W units (weight grads stay rank-local) — so
+        t_bwd_input + t_bwd_weight == t_bwd without double-counting the
+        wire."""
         hw = self.hw
         l_eff = np.maximum(l, hw.occupancy_floor)   # Fig. 3 flat region
         flops = (self.batch * l_eff * self._matmul_per_tok * matmul_mult
@@ -151,7 +193,7 @@ class AnalyticCostModel(CostModel):
         t_compute = flops / (self.tp * hw.peak_flops * hw.efficiency)
         # stage boundary transfer: activations of the slice (bf16)
         bytes_x = self.batch * l * self.cfg.d_model * 2
-        t_comm = hw.link_latency + bytes_x / hw.link_bw
+        t_comm = comm * (hw.link_latency + bytes_x / hw.link_bw)
         return self.slowdown * (t_compute + t_comm)
 
     def t_fwd(self, l: int, ctx: int) -> float:
@@ -181,6 +223,25 @@ class AnalyticCostModel(CostModel):
             "include_backward=False to price fwd and bwd units separately "
             "(1F1B-style schedules).")
         return self._t(l, ctx, MATMUL_BWD_MULT, FLASH_BWD_ATTN_MULT)
+
+    def t_bwd_input(self, l: int, ctx: int) -> float:
+        """B unit: dX parameter-matmul transposes (1× fwd) + the flash dQ
+        pass (1.5× fwd attention); the cotangent pays the reverse-ring
+        wire.  Same include_backward guard as :meth:`t_bwd`."""
+        assert not self.include_backward, (
+            "t_bwd_input prices the B unit alone; build with "
+            "include_backward=False (see t_bwd)")
+        return self._t(l, ctx, MATMUL_BWD_INPUT_MULT, FLASH_BWD_DQ_MULT)
+
+    def t_bwd_weight(self, l: int, ctx: int) -> float:
+        """W unit: dW parameter matmuls (1× fwd) + the flash dK/dV pass
+        (2× fwd attention); weight grads stay rank-local, so no wire term —
+        t_bwd_input + t_bwd_weight == t_bwd exactly."""
+        assert not self.include_backward, (
+            "t_bwd_weight prices the W unit alone; build with "
+            "include_backward=False (see t_bwd)")
+        return self._t(l, ctx, MATMUL_BWD_WEIGHT_MULT, FLASH_BWD_DKV_MULT,
+                       comm=0.0)
 
 
 class TableCostModel(CostModel):

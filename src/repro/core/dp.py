@@ -184,10 +184,23 @@ def ensure_executable(slices: Sequence[int], *, schedule: str, n_ranks: int,
     * ``interleaved-1f1b`` — both of the above: the interleaved group
       structure needs ``(D·M) % K == 0`` (split the largest slices), and
       the uniform slice count holds by construction.
+    * ``zb-h1`` — 1f1b's constraints exactly (V=1, uniform M by
+      construction); splitting each bwd into B + W units adds no structural
+      requirement on the PLAN — the warmup depth and drain switch of its
+      tick comb are derived from (K, M), not chosen by the DP.  Returned
+      unchanged.
+
+    Which names need the interleaved divisibility is read off the registry
+    (``max_virtual is None`` marks the V>1 family), so a newly registered
+    schedule states its constraint once.
     """
+    from .schedules import REGISTRY
     out = list(slices)
-    if (schedule in ("interleaved", "interleaved-1f1b")
-            and (n_microbatches * len(out)) % n_ranks):
+    spec = REGISTRY.get(schedule)
+    if spec is None:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; registered: {list(REGISTRY)}")
+    if spec.max_virtual is None and (n_microbatches * len(out)) % n_ranks:
         # D copies of the plan run; M only needs to clear K / gcd(D, K)
         need = n_ranks // np.gcd(n_microbatches, n_ranks)
         out = pad_slice_count(out, need, granularity=granularity)
@@ -202,17 +215,24 @@ def plan_schedule_info(slices: Sequence[int], *, schedule: str, n_ranks: int,
     interprets: the bubble weight the DP optimized against ((K-1)/V), and
     the memory geometry (``peak_live_items`` — D·M·V for autodiff-backward
     schedules, flat-in-D for the 1F1B family — plus the explicit-bwd
-    residual ring depth).  train's ``--dp-plan`` prints it so a plan's
-    memory consequence is visible next to its latency."""
+    residual ring depth).  For split-backward schedules (zb-h1) the peak
+    replay honors the typed unit kinds: a residual slot is released by the
+    unit's W tick, not its B tick, so ``peak_live_items`` already prices
+    the deferred weight-grad window; ``units_per_item`` (3 = F/B/W vs
+    2 = fwd + fused bwd vs 1 = fwd-only) names which geometry applies.
+    train's ``--dp-plan`` prints it so a plan's memory consequence is
+    visible next to its latency."""
     from .schedules import get_schedule
     assign = get_schedule(schedule, n_ranks=n_ranks, n_layers=1,
                           virtual_stages=virtual_stages,
                           n_microbatches=n_microbatches)
     n_items = n_microbatches * len(slices)
     info = {"bubble_weight": (n_ranks - 1) / virtual_stages,
-            "peak_live_items": assign.peak_live_items(n_items)}
+            "peak_live_items": assign.peak_live_items(n_items),
+            "units_per_item": assign.n_units(n_items) // max(1, n_items)}
     if assign.has_backward:
         info["residual_spread"] = assign.residual_spread(n_items)
+        info["splits_backward"] = assign.splits_backward
     return info
 
 

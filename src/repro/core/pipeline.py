@@ -20,23 +20,28 @@ Which units run when — and how their inputs arrive — comes entirely from
 the schedule IR (``core/schedules``): the executor is a single rolled
 ``lax.scan`` tick loop that INTERPRETS
 
-* the **tick table** ``(tick, rank) -> (work_item, chunk, is_bwd)`` — the
-  per-tick unit kind (idle / fwd / bwd) dispatches a ``lax.switch``; the
-  chunk index gathers the rank's per-chunk params/caches (shape-stable
-  ``dynamic_index_in_dim`` from the rank-major chunk stacks, so the body
-  traces ONCE regardless of D·M·V);
+* the **tick table** ``(tick, rank) -> (work_item, chunk, kind)`` — the
+  per-tick unit kind (idle / fwd / fused bwd / split B / split W)
+  dispatches a ``lax.switch``; the chunk index gathers the rank's per-chunk
+  params/caches (shape-stable ``dynamic_index_in_dim`` from the rank-major
+  chunk stacks, so the body traces ONCE regardless of D·M·V);
 * the **comm plan** (``StageAssignment.comm_plan``) — whether the reverse
-  cotangent ring fires, and the *skew hold* of each ring: wrap-around chunk
+  cotangent ring fires, the *skew hold* of each ring: wrap-around chunk
   handoffs (global stage ``v·K+K-1 -> (v+1)·K``) ride their ring one hop
   and then sit ``hold`` ticks in a destination-side skew ring buffer
   (depth ``hold+1``, pushed every tick, read at slot ``(t - hold) mod
-  (hold+1)``) before their consumer tick;
+  (hold+1)``) before their consumer tick — and the reverse ring's *lag*:
+  ``rev_lag > 0`` makes EVERY rank read its cotangent ``lag`` ticks after
+  delivery (ZB-H1's dilation-3 spacing), via the same gskew buffer;
 * the **residual geometry** (``residual_spread``) — explicit-bwd schedules
   save each fwd unit's inputs in a ``(V, R)`` ring buffer (collision-free
-  by the IR audit) and retire them at the unit's bwd tick.
+  by the IR audit) and retire them at the unit's retiring backward tick:
+  the fused bwd, or the W unit when the schedule splits the backward (B
+  reads the slot but keeps it live; B additionally saves the output
+  cotangent it consumed in a second ``(V, R)`` buffer for W to replay).
 
 Schedules select behavior through IR properties only — there is no
-per-schedule executor code.  The four registered schedules:
+per-schedule executor code.  The five registered schedules:
 
 * ``contiguous`` (V=1) — the paper's TeraPipe schedule; backward via
   whole-program autodiff (live activations grow with D·M).
@@ -50,6 +55,12 @@ per-schedule executor code.  The four registered schedules:
   K-tick skew buffers on both rings' wrap edges: interleaving's smaller
   bubble AND the flat-in-D memory bound.  Pure IR — the executor needed no
   changes to run it.
+* ``zb-h1`` (V=1) — zero-bubble ZB-H1 (``schedules.ZeroBubbleH1``): each
+  bwd unit splits into a B (``jax.vjp`` over the unit's *inputs* — the
+  cotangent leaves on the reverse ring immediately) and a same-rank W one
+  tick later (``jax.vjp`` over the *params*, replaying the saved residual
+  against the output cotangent B consumed).  The reverse ring runs with
+  ``rev_lag = 1``; W fills what 1F1B spends as drain bubble.
 
 For fwd-only schedules the scan is a differentiable loss
 (:func:`make_terapipe_loss`, wrapped in ``jax.value_and_grad``); for
@@ -101,7 +112,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
-from repro.core.schedules import (REGISTRY, get_schedule, interleave_stacked,
+from repro.core.schedules import (KIND_BWD_INPUT, KIND_BWD_WEIGHT, KIND_FWD,
+                                  REGISTRY, get_schedule, interleave_stacked,
                                   schedule_names, uninterleave_stacked)
 from repro.models import Model, build_model
 from repro.models.common import ModelConfig, rms_norm
@@ -417,12 +429,24 @@ def _make_pipeline_body(p: _Plan):
         pad = np.full((tcfg.extra_ticks, K, 3), -1, tab.dtype)
         tab = np.concatenate([tab, pad])
     ticks = tab.shape[0]
-    items_np, chunk_np, bwd_np = tab[..., 0], tab[..., 1], tab[..., 2]
-    # per-(tick, rank) switch branch: 0 = idle, 1 = fwd, 2 = bwd
-    kind_np = np.where(items_np < 0, 0, 1 + np.maximum(bwd_np, 0))
+    items_np, chunk_np, kcol_np = tab[..., 0], tab[..., 1], tab[..., 2]
+    splits = assign.splits_backward
+    # per-(tick, rank) switch branch: 0 = idle, 1 = fwd, then the backward
+    # arms — fused tables get one bwd branch (2); split tables get
+    # bwd-input (2) and bwd-weight (3).  No dead branches either way.
+    if splits:
+        branch_np = np.select(
+            [items_np < 0, kcol_np == KIND_FWD, kcol_np == KIND_BWD_INPUT,
+             kcol_np == KIND_BWD_WEIGHT], [0, 1, 2, 3])
+    else:
+        branch_np = np.where(items_np < 0, 0, 1 + np.maximum(kcol_np, 0))
     chunk_np = np.clip(chunk_np, 0, V - 1)
     R = assign.residual_spread(DM) if has_bwd else 0
-    Hx, Hg = plan.fwd_hold + 1, plan.rev_hold + 1    # skew buffer depths
+    assert not (plan.rev_hold and plan.rev_lag), (
+        "rev_hold (wrap-edge skew) and rev_lag (all-edge lag) are mutually "
+        "exclusive in the executor's gskew buffer; no schedule needs both")
+    Hx = plan.fwd_hold + 1                           # skew buffer depths
+    Hg = max(plan.rev_hold, plan.rev_lag) + 1
     starts_host, lens_host = p.starts, list(p.slice_lens)
     uniform = p.uniform
     inv_total = 1.0 / float(p.B * p.L)
@@ -448,7 +472,7 @@ def _make_pipeline_body(p: _Plan):
         lens_arr = jnp.asarray(lens_host, jnp.int32)
         items_tab = jnp.asarray(items_np, jnp.int32)
         chunk_tab = jnp.asarray(chunk_np, jnp.int32)
-        kind_tab = jnp.asarray(kind_np, jnp.int32)
+        branch_tab = jnp.asarray(branch_np, jnp.int32)
         # the local stack arrives rank-major chunk order: (V*bps, ...) ->
         # (V, bps, ...) so a tick can gather its chunk shape-stably
         stage_params_c = jax.tree.map(
@@ -492,18 +516,19 @@ def _make_pipeline_body(p: _Plan):
             # literal 0 so every chunk-indexed op below folds to a static
             # slice/update (no traced-gather overhead on the V=1 hot path)
             v_idx = read_tab(chunk_tab, t) if V > 1 else 0
-            kind = read_tab(kind_tab, t)
+            branch = read_tab(branch_tab, t)
             i_c = jnp.clip(i_raw, 0, DM - 1)
             mb_idx, sl_idx = i_c // M, i_c % M
             ctx = jnp.take(starts_arr, sl_idx) if not uniform \
                 else sl_idx * l
             # comm bookkeeping first: every received ring value lands in the
             # skew buffers (slot t mod H), idle ticks included — wrap
-            # handoffs are read back ``hold`` ticks later
+            # handoffs are read back ``hold`` ticks later (and under
+            # rev_lag, EVERY reverse delivery is read ``lag`` ticks later)
             if plan.fwd_hold:
                 carry = dict(carry, xskew=jax.lax.dynamic_update_index_in_dim(
                     carry["xskew"], carry["x"], t % Hx, 0))
-            if has_bwd and plan.rev_hold:
+            if has_bwd and Hg > 1:
                 carry = dict(carry, gskew=jax.lax.dynamic_update_index_in_dim(
                     carry["gskew"], carry["g"], t % Hg, 0))
             # forward input: rank 0 chunk 0 admits new work; rank 0 chunk
@@ -564,12 +589,22 @@ def _make_pipeline_body(p: _Plan):
                         carry["gskew"], (t - plan.rev_hold) % Hg, 0,
                         keepdims=False)
                     g_ring = jnp.where(k_rank == K - 1, g_wrap, carry["g"])
+                elif plan.rev_lag:
+                    # all-edge lag: EVERY rank consumes its cotangent
+                    # ``rev_lag`` ticks after the ring delivered it
+                    g_ring = jax.lax.dynamic_index_in_dim(
+                        carry["gskew"], (t - plan.rev_lag) % Hg, 0,
+                        keepdims=False)
                 else:
                     g_ring = carry["g"]
                 # the last global stage seeds from its own loss, not the ring
                 g_cot = jnp.where(is_last, jnp.zeros_like(g_ring), g_ring)
+                seed = jnp.where(is_last, jnp.float32(1), jnp.float32(0))
 
-                def bwd_branch(c):
+                def read_residual(c):
+                    """The unit's saved fwd inputs; the slot is released at
+                    the retiring backward tick (fused bwd, or W when the
+                    schedule splits the backward — B only reads it)."""
                     slot = i_c % R
                     x_saved = jax.lax.dynamic_slice(
                         c["rx"], (v_idx, slot, 0, 0, 0),
@@ -578,27 +613,30 @@ def _make_pipeline_body(p: _Plan):
                         lambda buf: jax.lax.dynamic_slice(
                             buf, (v_idx, slot) + (0,) * (buf.ndim - 2),
                             (1, 1) + buf.shape[2:])[0, 0], c["rc"])
+                    return x_saved, c_saved
 
-                    def unit(sp, xi, ci, hp):
-                        xo, co = p.stage_apply(sp, xi, ci, ctx)
-                        return xo, co, slice_loss(xo, hp, labels_sl, mask)
+                def unit(sp, xi, ci, hp):
+                    xo, co = p.stage_apply(sp, xi, ci, ctx)
+                    return xo, co, slice_loss(xo, hp, labels_sl, mask)
 
-                    (_, _, ls), vjp = jax.vjp(unit, params_c, x_saved,
-                                              c_saved, head_p)
-                    # first bwd of a microbatch at this chunk (slice M-1):
-                    # no downstream-slice cache cotangent accumulated yet
+                def out_cotangent(c):
+                    """(d_xo, d_co, d_loss) cotangent of the unit's outputs:
+                    the ring-delivered activation cotangent, the accumulated
+                    downstream-slice cache cotangent (zeroed at the first
+                    bwd of a microbatch, slice M-1), and the loss seed."""
                     first_bwd = sl_idx == M - 1
                     gcache_c = chunk_of(c["gcache"], v_idx)
                     gcache_in = tree_where(
                         first_bwd, jax.tree.map(jnp.zeros_like, gcache_c),
                         gcache_c)
-                    seed = jnp.where(is_last, jnp.float32(1), jnp.float32(0))
-                    d_sp, d_x_in, d_c_in, d_hp = vjp((g_cot, gcache_in, seed))
-                    d_stage2 = jax.tree.map(
-                        lambda acc, g: acc.at[v_idx].add(g),
-                        c["d_stage"], d_sp)
-                    # embedding cotangent: only rank 0 chunk 0's d(x_in)
-                    # belongs to x_emb (everyone else's went down the ring)
+                    return g_cot, gcache_in, seed
+
+                def apply_input_cots(c, d_x_in, d_c_in, ls):
+                    """Input-side results into the carry: the cotangent onto
+                    the reverse ring, the cache-cotangent accumulator, the
+                    embedding cotangent (only rank 0 chunk 0's d(x_in)
+                    belongs to x_emb — everyone else's went down the ring),
+                    and the loss term."""
                     add = jnp.where((k_rank == 0) & (v_idx == 0), d_x_in,
                                     jnp.zeros_like(d_x_in))
                     seg = jax.lax.dynamic_slice(
@@ -609,20 +647,87 @@ def _make_pipeline_body(p: _Plan):
                     return dict(
                         c, g=d_x_in,
                         gcache=put_chunk(c["gcache"], d_c_in, v_idx),
-                        d_stage=d_stage2,
-                        d_ln=c["d_ln"] + d_hp[0], d_wh=c["d_wh"] + d_hp[1],
                         d_emb=d_emb2,
                         loss=c["loss"] + jnp.where(is_last, ls,
                                                    jnp.float32(0)))
 
-                out = jax.lax.switch(kind, (idle_branch, fwd_branch,
-                                            bwd_branch), carry)
+                def apply_param_cots(c, d_sp, d_hp):
+                    """Param-side results into the carry: stage-chunk and
+                    head grads."""
+                    d_stage2 = jax.tree.map(
+                        lambda acc, g: acc.at[v_idx].add(g),
+                        c["d_stage"], d_sp)
+                    return dict(c, d_stage=d_stage2,
+                                d_ln=c["d_ln"] + d_hp[0],
+                                d_wh=c["d_wh"] + d_hp[1])
+
+                def bwd_branch(c):
+                    """Fused backward: one vjp over params AND inputs."""
+                    x_saved, c_saved = read_residual(c)
+                    (_, _, ls), vjp = jax.vjp(unit, params_c, x_saved,
+                                              c_saved, head_p)
+                    d_sp, d_x_in, d_c_in, d_hp = vjp(out_cotangent(c))
+                    return apply_param_cots(
+                        apply_input_cots(c, d_x_in, d_c_in, ls), d_sp, d_hp)
+
+                def bwd_input_branch(c):
+                    """B: vjp over the unit's INPUTS only — the cotangent
+                    leaves on the reverse ring THIS tick; the output
+                    cotangent it consumed is saved for the matching W."""
+                    x_saved, c_saved = read_residual(c)
+                    (_, _, ls), vjp = jax.vjp(
+                        lambda xi, ci: unit(params_c, xi, ci, head_p),
+                        x_saved, c_saved)
+                    d_xo, d_co, d_ls = out_cotangent(c)
+                    d_x_in, d_c_in = vjp((d_xo, d_co, d_ls))
+                    slot = i_c % R
+                    c = dict(
+                        c,
+                        rg=jax.lax.dynamic_update_slice(
+                            c["rg"], d_xo[None, None],
+                            (v_idx, slot, 0, 0, 0)),
+                        rgc=jax.tree.map(
+                            lambda buf, g: jax.lax.dynamic_update_slice(
+                                buf, g[None, None],
+                                (v_idx, slot) + (0,) * g.ndim),
+                            c["rgc"], d_co))
+                    return apply_input_cots(c, d_x_in, d_c_in, ls)
+
+                def bwd_weight_branch(c):
+                    """W: vjp over the unit's PARAMS (stage chunk + head),
+                    replaying the saved residual against the output
+                    cotangent its B consumed; releases the residual slot.
+                    The loss seed recomputes from is_last — only the
+                    array-shaped cotangents need saving."""
+                    x_saved, c_saved = read_residual(c)
+                    slot = i_c % R
+                    g_saved = jax.lax.dynamic_slice(
+                        c["rg"], (v_idx, slot, 0, 0, 0),
+                        (1, 1, mb_local, l, d_model))[0, 0]
+                    gc_saved = jax.tree.map(
+                        lambda buf: jax.lax.dynamic_slice(
+                            buf, (v_idx, slot) + (0,) * (buf.ndim - 2),
+                            (1, 1) + buf.shape[2:])[0, 0], c["rgc"])
+                    _, vjp = jax.vjp(
+                        lambda sp, hp: unit(sp, x_saved, c_saved, hp),
+                        params_c, head_p)
+                    d_sp, d_hp = vjp((g_saved, gc_saved, seed))
+                    return apply_param_cots(c, d_sp, d_hp)
+
+                if splits:
+                    out = jax.lax.switch(
+                        branch, (idle_branch, fwd_branch, bwd_input_branch,
+                                 bwd_weight_branch), carry)
+                else:
+                    out = jax.lax.switch(branch, (idle_branch, fwd_branch,
+                                                  bwd_branch), carry)
             elif tcfg.skip_bubbles:
-                out = jax.lax.switch(kind, (idle_branch, fwd_branch), carry)
+                out = jax.lax.switch(branch, (idle_branch, fwd_branch),
+                                     carry)
             else:
                 # debug: compute every tick, mask the merge (fwd-only)
                 computed = fwd_branch(carry)
-                out = tree_where(kind > 0, computed, carry)
+                out = tree_where(branch > 0, computed, carry)
             # activations ride the forward ring (issued BEFORE the trailing
             # bookkeeping below so the async collective overlaps it);
             # cotangents ride the reverse ring.  Consumers read a ring value
@@ -639,7 +744,7 @@ def _make_pipeline_body(p: _Plan):
                 # last rank's rows are read.  Idle ticks land in the dump
                 # row DM; under interleaving an item's writes ascend in
                 # chunk order, so the final chunk V-1 lands last.
-                row = jnp.where(kind > 0, i_c, DM)
+                row = jnp.where(branch > 0, i_c, DM)
                 out = dict(out, out=jax.lax.dynamic_update_slice(
                     out["out"], x_send[None], (row, 0, 0, 0)))
             return out, None
@@ -652,13 +757,22 @@ def _make_pipeline_body(p: _Plan):
             carry["xskew"] = jnp.zeros((Hx, mb_local, l, d_model), cfg.dtype)
         if has_bwd:
             carry["g"] = jnp.zeros((mb_local, l, d_model), cfg.dtype)
-            if plan.rev_hold:
+            if Hg > 1:
                 carry["gskew"] = jnp.zeros((Hg, mb_local, l, d_model),
                                            cfg.dtype)
             carry["gcache"] = jax.tree.map(jnp.zeros_like, caches0)
             carry["rx"] = jnp.zeros((V, R, mb_local, l, d_model), cfg.dtype)
             carry["rc"] = jax.tree.map(
                 lambda a: jnp.zeros((V, R) + a.shape[1:], a.dtype), caches0)
+            if splits:
+                # output cotangents B consumed, replayed by W: same (V, R)
+                # ring-buffer geometry as the fwd residuals (a unit's slot
+                # is written at B and released at W)
+                carry["rg"] = jnp.zeros((V, R, mb_local, l, d_model),
+                                        cfg.dtype)
+                carry["rgc"] = jax.tree.map(
+                    lambda a: jnp.zeros((V, R) + a.shape[1:], a.dtype),
+                    caches0)
             carry["d_stage"] = jax.tree.map(jnp.zeros_like, stage_params_c)
             carry["d_ln"] = jnp.zeros_like(head_p[0])
             carry["d_wh"] = jnp.zeros_like(head_p[1])
@@ -860,7 +974,7 @@ def make_terapipe_value_and_grad(model: Model, specs, mesh: Mesh,
     one entry point train/dryrun drive.  Fwd-only schedules (contiguous /
     interleaved) wrap the interpreter's loss in ``jax.value_and_grad``
     (autodiff backward, activations live to the drain); explicit-bwd
-    schedules (1f1b / interleaved-1f1b) run the SAME interpreter's
+    schedules (1f1b / interleaved-1f1b / zb-h1) run the SAME interpreter's
     loss+grad program (live activations bounded by the pipeline depth).
     Also returns the param sharding tree builder."""
     p = _Plan(model, specs, mesh, tcfg, seq_len, global_batch)

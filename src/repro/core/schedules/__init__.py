@@ -18,11 +18,13 @@ the (padded) stacked main group and lives on rank ``s mod K`` as chunk
   chunk order, so a plain pipe-sharding of the leading layer axis hands rank
   ``k`` exactly chunks ``k, K+k, …, (V-1)·K+k``);
 * **timing** — the tick table mapping ``(tick, rank) -> (work_item, chunk,
-  is_bwd)`` (:meth:`StageAssignment.tick_table`);
+  kind)`` (:meth:`StageAssignment.tick_table`);
 * **communication** — :meth:`StageAssignment.comm_plan`: which ppermute
-  rings fire each tick (forward activation ring, reverse cotangent ring)
-  and the *skew hold* of each — how many extra ticks a wrap-around chunk
-  handoff sits in a destination-side ring buffer before its consumer runs;
+  rings fire each tick (forward activation ring, reverse cotangent ring),
+  the *skew hold* of each — how many extra ticks a wrap-around chunk
+  handoff sits in a destination-side ring buffer before its consumer runs —
+  and the reverse ring's *lag* (extra delivery delay on every reverse edge,
+  ZB-H1's dilation-3 spacing);
 * **validity** — :meth:`StageAssignment.validate` audits that every
   ``(work_item, stage)`` unit runs exactly once and that every dependency
   lands exactly when the comm plan says the rings + skew buffers deliver
@@ -36,18 +38,26 @@ tick table + comm plan — so a new schedule is an IR subclass plus a
 Unit kinds and the 1F1B family
 ------------------------------
 
-A unit is ``(work_item, chunk, is_bwd)``.  :func:`contiguous` and
-:func:`interleaved` are fwd-only tables (their backward pass is the autodiff
-transpose of the whole program, so every saved residual lives to the drain:
-``peak_live_items() == D·M·V``).  :class:`OneFOneB` schedules explicit bwd
-units 1F1B-style — microbatch-ascending but slice-DESCENDING within a
-microbatch (TeraPipe's attention-cache cotangents accumulate in reverse
-slice order) — bounding live residuals by the pipeline depth instead of the
-work-item count.  :class:`InterleavedOneFOneB` composes both: the 1F1B unit
-ordering over V round-robin chunks, with the wrap-around chunk handoffs
-held K ticks in the skew buffers its comm plan declares — an IR-only
-schedule the unified executor runs with no schedule-specific code.
-Chimera-style bidirectional pairs remain future schedules on the same IR.
+A unit is ``(work_item, chunk, kind)`` with a typed kind axis —
+``KIND_FWD``, the fused ``KIND_BWD``, and the zero-bubble split pair
+``KIND_BWD_INPUT`` (B: input cotangent onto the reverse ring) /
+``KIND_BWD_WEIGHT`` (W: parameter grads replayed from the saved residual;
+sends nothing).  :func:`contiguous` and :func:`interleaved` are fwd-only
+tables (their backward pass is the autodiff transpose of the whole program,
+so every saved residual lives to the drain: ``peak_live_items() ==
+D·M·V``).  :class:`OneFOneB` schedules explicit fused-bwd units 1F1B-style
+— microbatch-ascending but slice-DESCENDING within a microbatch (TeraPipe's
+attention-cache cotangents accumulate in reverse slice order) — bounding
+live residuals by the pipeline depth instead of the work-item count.
+:class:`InterleavedOneFOneB` composes both: the 1F1B unit ordering over V
+round-robin chunks, with the wrap-around chunk handoffs held K ticks in the
+skew buffers its comm plan declares — an IR-only schedule the unified
+executor runs with no schedule-specific code.  :class:`ZeroBubbleH1`
+(``splits_backward = True``) splits each fused bwd into a B unit and a
+same-rank W unit one tick later, so the cotangent ring advances at B-cost
+and the deferred W units fill the drain bubble (ZB-H1, Qi et al. 2023);
+residual slots are released by W, not B.  Chimera-style bidirectional pairs
+remain future schedules on the same IR.
 
 The registry
 ------------
@@ -60,10 +70,13 @@ registering a schedule here surfaces it everywhere at once.
 import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
-from .ir import (CommPlan, InterleavedOneFOneB, OneFOneB,  # noqa: F401
-                 ScheduleValidationError, StageAssignment, contiguous,
-                 interleave_stacked, interleaved, interleaved_one_f_one_b,
-                 one_f_one_b, uninterleave_stacked)
+from .ir import (BWD_RING_KINDS, KIND_BWD, KIND_BWD_INPUT,  # noqa: F401
+                 KIND_BWD_WEIGHT, KIND_FWD, KIND_IDLE, RETIRING_KINDS,
+                 CommPlan, InterleavedOneFOneB, OneFOneB,
+                 ScheduleValidationError, StageAssignment, ZeroBubbleH1,
+                 contiguous, interleave_stacked, interleaved,
+                 interleaved_one_f_one_b, kind_name, one_f_one_b,
+                 uninterleave_stacked, zb_h1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +92,8 @@ class ScheduleSpec:
     min_virtual: int = 1
     max_virtual: Optional[int] = 1
     has_backward: bool = False
+    #: backward split into B/W unit kinds (see ir.ZeroBubbleH1)
+    splits_backward: bool = False
 
 
 REGISTRY: Dict[str, ScheduleSpec] = {}
@@ -152,11 +167,20 @@ register_schedule(ScheduleSpec(
          "bound with interleaving's ~V× smaller bubble",
     min_virtual=2, max_virtual=None, has_backward=True,
 ))
+register_schedule(ScheduleSpec(
+    name="zb-h1",
+    factory=lambda K, V, n, D: ZeroBubbleH1(K, 1, n, D),
+    help="ZB-H1 zero-bubble (V=1): 1F1B with each bwd split into B "
+         "(input-cotangent) and W (weight-grad) units; W fills the drain",
+    has_backward=True, splits_backward=True,
+))
 
 
-__all__ = ["CommPlan", "InterleavedOneFOneB", "OneFOneB", "REGISTRY",
-           "ScheduleSpec", "ScheduleValidationError", "StageAssignment",
+__all__ = ["BWD_RING_KINDS", "CommPlan", "InterleavedOneFOneB", "KIND_BWD",
+           "KIND_BWD_INPUT", "KIND_BWD_WEIGHT", "KIND_FWD", "KIND_IDLE",
+           "OneFOneB", "REGISTRY", "RETIRING_KINDS", "ScheduleSpec",
+           "ScheduleValidationError", "StageAssignment", "ZeroBubbleH1",
            "check_virtual_stages", "contiguous", "get_schedule",
            "interleave_stacked", "interleaved", "interleaved_one_f_one_b",
-           "one_f_one_b", "register_schedule", "schedule_help",
-           "schedule_names", "uninterleave_stacked"]
+           "kind_name", "one_f_one_b", "register_schedule", "schedule_help",
+           "schedule_names", "uninterleave_stacked", "zb_h1"]

@@ -29,10 +29,21 @@ Two engines:
     (``schedules.InterleavedOneFOneB``): the same parity mix, but
     chunk-sized (1/V) fill/drain — a strictly smaller bubble fraction than
     plain 1f1b on the same scheme.
+  - ``zb-h1`` — the zero-bubble split-backward table
+    (``schedules.ZeroBubbleH1``): B (input-grad) and W (weight-grad) units
+    priced separately, so no tick pays more than max(fwd, B, W) — the
+    2P+3.5A fused-bwd tick ceiling of the 1f1b family drops to P+2A.
 
-Backward units default to ``BWD_COST_FACTOR ×`` their item's forward;
-pass ``t_bwd_of`` (e.g. a measured ``CostModel.t_bwd``) to price them from
-the fused-kernel cost model instead.
+  The engine prices units BY KIND (the tick table's typed third column):
+  fwd units ``t_item/V``, fused bwd units ``bwd/V``, split B / W units
+  ``b/V`` / ``w/V``.  Which explicit-bwd disciplines exist comes from the
+  schedule REGISTRY (``has_backward``), not a hard-coded list.
+
+Backward units default to ``BWD_COST_FACTOR ×`` their item's forward
+(split B and W to ``BWD_INPUT_COST_FACTOR`` / ``BWD_WEIGHT_COST_FACTOR ×``
+forward); pass ``t_bwd_of`` / ``t_bwd_input_of`` / ``t_bwd_weight_of``
+(e.g. a measured ``CostModel``) to price them from the fused-kernel cost
+model instead.
 
 Supports per-stage slowdown factors (straggler studies / DP-based
 re-planning) and fwd+bwd symmetric simulation.
@@ -45,10 +56,16 @@ import numpy as np
 
 from .cost_model import CostModel
 from .schedule import SlicingScheme
-from .schedules import StageAssignment, get_schedule
+from .schedules import (KIND_BWD, KIND_BWD_INPUT, KIND_BWD_WEIGHT, KIND_FWD,
+                        REGISTRY, StageAssignment, get_schedule)
 
 #: bwd ≈ 2·fwd (two matmuls per fwd matmul), the convention _work_items uses
 BWD_COST_FACTOR = 2.0
+#: default split of that convention over B / W unit kinds (× the item's
+#: forward; they sum to BWD_COST_FACTOR so split schedules pay exactly what
+#: fused ones do, rearranged)
+BWD_INPUT_COST_FACTOR = 1.0
+BWD_WEIGHT_COST_FACTOR = 1.0
 
 
 def _work_items(scheme: SlicingScheme, t_of, include_backward: bool):
@@ -108,27 +125,50 @@ def _lockstep_loop(items, K: int, slow) -> float:
     return float(total)
 
 
-def _table_total(assign: StageAssignment, items, slow,
-                 bwd_items=None) -> float:
+def _unit_prices(items, bwd_items=None, b_items=None, w_items=None):
+    """Per-item durations for each unit kind, with defaults layered so that
+    ``B + W == fused`` always holds (split schedules pay exactly the fused
+    work, rearranged): fused bwd defaults to ``BWD_COST_FACTOR × fwd``; B
+    defaults to an explicit ``b_items``, else half the explicit fused price,
+    else ``BWD_INPUT_COST_FACTOR × fwd``; W defaults to the remainder
+    ``fused - B``.  Returns ``(f, fused, b, w)`` numpy arrays in fwd item
+    order."""
+    f = np.asarray(items, np.float64)
+    fused = (f * BWD_COST_FACTOR if bwd_items is None
+             else np.asarray(bwd_items, np.float64))
+    if b_items is not None:
+        b = np.asarray(b_items, np.float64)
+    elif bwd_items is not None:
+        b = fused / 2.0
+    else:
+        b = f * BWD_INPUT_COST_FACTOR
+    w = (fused - b if w_items is None
+         else np.asarray(w_items, np.float64))
+    return f, fused, b, w
+
+
+def _table_total(assign: StageAssignment, items, slow, bwd_items=None,
+                 b_items=None, w_items=None) -> float:
     """Price ANY lockstep schedule from its tick table — the single engine
     every table discipline goes through (the same
-    ``(tick, rank) -> (work_item, chunk, is_bwd)`` surface the executor
-    interprets).  A fwd unit of item i costs ``items[i]/V`` (layer chunks
-    are 1/V of a rank's stack); a bwd unit costs ``bwd_items[i]/V``
-    (default ``BWD_COST_FACTOR ×`` fwd).  Tick duration = max over active
-    ranks; one numpy broadcast over the whole (ticks, K) grid replaces an
-    O(ticks·K) interpreter loop (cf. ``dp._cost_matrix``)."""
-    items = np.asarray(items, np.float64)
+    ``(tick, rank) -> (work_item, chunk, kind)`` surface the executor
+    interprets).  Units are priced BY KIND: a fwd unit of item i costs
+    ``items[i]/V`` (layer chunks are 1/V of a rank's stack), a fused bwd
+    unit ``bwd_items[i]/V``, and the zero-bubble split pair B / W
+    ``b_items[i]/V`` / ``w_items[i]/V`` (defaults: see
+    :func:`_unit_prices`).  Tick duration = max over active ranks; one
+    numpy broadcast over the whole (ticks, K) grid replaces an O(ticks·K)
+    interpreter loop (cf. ``dp._cost_matrix``)."""
+    f, fused, b, w = _unit_prices(items, bwd_items, b_items, w_items)
     V = assign.virtual_stages
-    tab = assign.tick_table(items.size)
-    i, bwd = tab[..., 0], tab[..., 2]
-    ic = np.clip(i, 0, items.size - 1)
-    f = items[ic]
-    b = (f * BWD_COST_FACTOR if bwd_items is None
-         else np.asarray(bwd_items, np.float64)[ic])
-    dur = np.where(i >= 0,
-                   np.where(bwd == 1, b, f) * (np.asarray(slow)[None, :] / V),
-                   0.0)
+    tab = assign.tick_table(f.size)
+    i, kind = tab[..., 0], tab[..., 2]
+    ic = np.clip(i, 0, f.size - 1)
+    per_kind = np.select(
+        [kind == KIND_FWD, kind == KIND_BWD, kind == KIND_BWD_INPUT,
+         kind == KIND_BWD_WEIGHT],
+        [f[ic], fused[ic], b[ic], w[ic]], default=0.0)
+    dur = np.where(i >= 0, per_kind * (np.asarray(slow)[None, :] / V), 0.0)
     return float(dur.max(axis=1).sum())
 
 
@@ -138,15 +178,25 @@ def _lockstep_total(items, K: int, V: int, slow) -> float:
                                         n_layers=1), items, slow)
 
 
+def _explicit_bwd(discipline: str) -> bool:
+    """True for disciplines whose tick table schedules backward units
+    explicitly — read from the schedule REGISTRY (``has_backward``), so a
+    newly registered explicit-bwd schedule is a simulator discipline with
+    no simulator edits."""
+    spec = REGISTRY.get(discipline)
+    return spec is not None and spec.has_backward
+
+
 def _discipline_total(items, K: int, discipline: str, virtual_stages: int,
-                      slow, n_microbatches: int = 1,
-                      bwd_items=None) -> float:
+                      slow, n_microbatches: int = 1, bwd_items=None,
+                      b_items=None, w_items=None) -> float:
     """Dispatch flattened work-item durations to one discipline engine —
     the single place a new discipline gets wired in.  Table disciplines
     build their schedule-IR assignment (the registry factories in
     ``core/schedules``) and price its tick table.  For the explicit-bwd
     disciplines, ``items`` must be the fwd-only durations (the bwd table is
-    explicit; ``bwd_items`` optionally prices the bwd units)."""
+    explicit; ``bwd_items``/``b_items``/``w_items`` optionally price the
+    fused-bwd / B / W units)."""
     if discipline == "async":
         assert virtual_stages == 1, \
             "async discipline models the contiguous (V=1) schedule only"
@@ -157,11 +207,12 @@ def _discipline_total(items, K: int, discipline: str, virtual_stages: int,
         return _lockstep_total(items, K, 1, slow)
     if discipline == "interleaved":
         return _lockstep_total(items, K, virtual_stages, slow)
-    if discipline in ("1f1b", "interleaved-1f1b"):
+    if _explicit_bwd(discipline):
         assign = get_schedule(discipline, n_ranks=K, n_layers=1,
                               virtual_stages=virtual_stages,
                               n_microbatches=n_microbatches)
-        return _table_total(assign, items, slow, bwd_items=bwd_items)
+        return _table_total(assign, items, slow, bwd_items=bwd_items,
+                            b_items=b_items, w_items=w_items)
     raise ValueError(discipline)
 
 
@@ -178,25 +229,32 @@ def _one_f_one_b_groups(scheme: SlicingScheme) -> int:
 def simulate(scheme: SlicingScheme, K: int, t_of, *,
              discipline: str = "async", include_backward: bool = False,
              stage_slowdown: Optional[Sequence[float]] = None,
-             virtual_stages: int = 1, t_bwd_of=None) -> float:
+             virtual_stages: int = 1, t_bwd_of=None, t_bwd_input_of=None,
+             t_bwd_weight_of=None) -> float:
     """t_of(b, l, ctx) -> seconds for one stage.  Returns total latency.
-    ``t_bwd_of(b, l, ctx)`` (explicit-bwd disciplines only) prices backward
-    units from a real cost model (``CostModel.t_bwd``) instead of the
-    ``BWD_COST_FACTOR`` convention."""
+    ``t_bwd_of(b, l, ctx)`` (explicit-bwd disciplines only) prices fused
+    backward units from a real cost model (``CostModel.t_bwd``) instead of
+    the ``BWD_COST_FACTOR`` convention; ``t_bwd_input_of`` /
+    ``t_bwd_weight_of`` likewise price the split B / W units
+    (``CostModel.t_bwd_input`` / ``t_bwd_weight``)."""
     slow = np.ones(K) if stage_slowdown is None else np.asarray(stage_slowdown)
     assert len(slow) == K
-    if discipline in ("1f1b", "interleaved-1f1b"):
+    if _explicit_bwd(discipline):
         # the explicit-bwd tables ARE the fwd+bwd program; bwd costs are
         # applied per unit inside the engine, not by appending reversed items
         assert include_backward, \
             f"{discipline} is inherently fwd+bwd; pass include_backward=True"
         items = _work_items(scheme, t_of, include_backward=False)
-        return _discipline_total(items, K, discipline, virtual_stages, slow,
-                                 n_microbatches=_one_f_one_b_groups(scheme),
-                                 bwd_items=_bwd_work_items(scheme, t_bwd_of))
-    assert t_bwd_of is None, \
-        "t_bwd_of prices explicit bwd units; only the 1f1b-family " \
-        "disciplines schedule them"
+        return _discipline_total(
+            items, K, discipline, virtual_stages, slow,
+            n_microbatches=_one_f_one_b_groups(scheme),
+            bwd_items=_bwd_work_items(scheme, t_bwd_of),
+            b_items=_bwd_work_items(scheme, t_bwd_input_of),
+            w_items=_bwd_work_items(scheme, t_bwd_weight_of))
+    assert t_bwd_of is None and t_bwd_input_of is None \
+        and t_bwd_weight_of is None, \
+        "t_bwd_of/t_bwd_input_of/t_bwd_weight_of price explicit bwd units; " \
+        "only the 1f1b-family disciplines schedule them"
     items = _work_items(scheme, t_of, include_backward)
     return _discipline_total(items, K, discipline, virtual_stages, slow)
 
@@ -205,28 +263,37 @@ def bubble_fraction(scheme: SlicingScheme, K: int, t_of, *,
                     discipline: str = "lockstep", virtual_stages: int = 1,
                     include_backward: bool = False,
                     stage_slowdown: Optional[Sequence[float]] = None,
-                    t_bwd_of=None) -> float:
+                    t_bwd_of=None, t_bwd_input_of=None,
+                    t_bwd_weight_of=None) -> float:
     """Fraction of the step spent idle in fill/drain: (T - T_work) / T.
 
     T_work = Σ_i t_i scaled by the slowest rank — the busy time of a rank
     that touches every work item (V chunks of t_i/V each), i.e. the
-    zero-bubble floor of the lockstep disciplines.
+    zero-bubble floor of the lockstep disciplines.  For split-backward
+    disciplines the per-item bwd work is B + W, which equals the fused
+    price under every default layering of :func:`_unit_prices` — the floor
+    is the same whether a schedule splits its backward or not.
     """
     # flatten once and feed the discipline engine directly — t_of can be a
     # measured cost model; going through simulate() would evaluate it a
     # second time per work item
     slow = np.ones(K) if stage_slowdown is None else np.asarray(stage_slowdown)
-    if discipline in ("1f1b", "interleaved-1f1b"):
+    if _explicit_bwd(discipline):
         assert include_backward, \
             f"{discipline} is inherently fwd+bwd; pass include_backward=True"
         items = _work_items(scheme, t_of, include_backward=False)
         bwd_items = _bwd_work_items(scheme, t_bwd_of)
+        b_items = _bwd_work_items(scheme, t_bwd_input_of)
+        w_items = _bwd_work_items(scheme, t_bwd_weight_of)
         T = _discipline_total(items, K, discipline, virtual_stages, slow,
                               n_microbatches=_one_f_one_b_groups(scheme),
-                              bwd_items=bwd_items)
-        bwd_sum = (float(np.sum(items)) * BWD_COST_FACTOR
-                   if bwd_items is None else float(np.sum(bwd_items)))
-        work = (float(np.sum(items)) + bwd_sum) * float(np.max(slow))
+                              bwd_items=bwd_items, b_items=b_items,
+                              w_items=w_items)
+        f, fused, b, w = _unit_prices(items, bwd_items, b_items, w_items)
+        bwd_sum = (float(np.sum(b + w))
+                   if REGISTRY[discipline].splits_backward
+                   else float(np.sum(fused)))
+        work = (float(np.sum(f)) + bwd_sum) * float(np.max(slow))
         return (T - work) / T
     items = _work_items(scheme, t_of, include_backward)
     T = _discipline_total(items, K, discipline, virtual_stages, slow)

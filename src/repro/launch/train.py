@@ -82,6 +82,49 @@ def build_value_and_grad(model, specs, mesh, args):
         print(f"[dp-plan] slices {list(slice_lens)} "
               f"(predicted {plan.latency*1e3:.1f} ms/iter; "
               + " ".join(f"{k}={v}" for k, v in info.items()) + ")")
+        # rank EVERY registered schedule on this plan (ROADMAP: the DP
+        # should pick the winning schedule, not just evaluate the requested
+        # one): per schedule, apply its executability post-pass, price the
+        # resulting fwd(+typed bwd) tick table with the same analytic model,
+        # and report the argmin alongside its memory geometry
+        from repro.core.schedule import SlicingScheme
+        from repro.core.schedules import REGISTRY
+        from repro.core.simulator import simulate
+        cm_u = AnalyticCostModel(model.cfg, TPU_V5E,
+                                 layers_per_stage=max(1, model.n_blocks // K),
+                                 include_backward=False)
+        D = args.microbatches
+        best = None
+        for name, spec in REGISTRY.items():
+            V = (max(args.virtual_stages, spec.min_virtual)
+                 if spec.max_virtual is None else spec.min_virtual)
+            sl = ensure_executable(plan.slices, schedule=name, n_ranks=K,
+                                   n_microbatches=D, granularity=g)
+            sch = SlicingScheme.from_dp(args.seq, D, [(1, list(sl))] * D)
+            if spec.has_backward:
+                from repro.core.schedules import (KIND_BWD, KIND_BWD_INPUT,
+                                                  KIND_BWD_WEIGHT)
+                lat = simulate(
+                    sch, K, lambda b, l, c: cm_u.unit_cost(l, c),
+                    discipline=name, virtual_stages=V, include_backward=True,
+                    t_bwd_of=lambda b, l, c: cm_u.unit_cost(
+                        l, c, kind=KIND_BWD),
+                    t_bwd_input_of=lambda b, l, c: cm_u.unit_cost(
+                        l, c, kind=KIND_BWD_INPUT),
+                    t_bwd_weight_of=lambda b, l, c: cm_u.unit_cost(
+                        l, c, kind=KIND_BWD_WEIGHT))
+            else:
+                disc = "lockstep" if name == "contiguous" else name
+                lat = simulate(sch, K, lambda b, l, c: cm(l, c),
+                               discipline=disc, virtual_stages=V)
+            sinfo = plan_schedule_info(sl, schedule=name, n_ranks=K,
+                                       virtual_stages=V, n_microbatches=D)
+            print(f"[dp-plan]   {name:<17} V={V} {lat*1e3:10.3f} ms/iter  "
+                  + " ".join(f"{k}={v}" for k, v in sinfo.items()))
+            if best is None or lat < best[1]:
+                best = (name, lat, V)
+        print(f"[dp-plan] winner: {best[0]} (V={best[2]}, "
+              f"{best[1]*1e3:.3f} ms/iter simulated fwd+bwd)")
     tcfg = TeraPipeConfig(
         n_token_slices=args.token_slices if args.mode == "terapipe" else 1,
         slice_lens=slice_lens,

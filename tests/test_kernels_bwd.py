@@ -104,10 +104,11 @@ def test_custom_vjp_closure_is_cached():
 
 def test_executors_with_kernel_match_reference():
     """The unified executor under EVERY registered schedule (autodiff-bwd
-    contiguous/interleaved + explicit-bwd 1f1b/interleaved-1f1b) with
-    ``use_kernel=True`` routes attention through the traced-ctx Pallas
-    kernels (attn_sliced_dyn) and reproduces the reference loss AND grads —
-    K=2 and K=4, uniform and non-uniform slices, GQA heads."""
+    contiguous/interleaved + explicit-bwd 1f1b/interleaved-1f1b +
+    split-bwd zb-h1) with ``use_kernel=True`` routes attention through the
+    traced-ctx Pallas kernels (attn_sliced_dyn) and reproduces the
+    reference loss AND grads — K=2 and K=4, uniform and non-uniform
+    slices, GQA heads."""
     out = _run_subprocess(devices=4, code="""
         import jax, jax.numpy as jnp
         from repro.compat import make_mesh, use_mesh
@@ -131,7 +132,8 @@ def test_executors_with_kernel_match_reference():
         for K in (2, 4):
             mesh = make_mesh((1, K), ("data", "pipe"))
             for sched, V in (("contiguous", 1), ("interleaved", 2),
-                             ("1f1b", 1), ("interleaved-1f1b", 2)):
+                             ("1f1b", 1), ("interleaved-1f1b", 2),
+                             ("zb-h1", 1)):
                 for desc, kw in [("uniform", dict(n_token_slices=4)),
                                  ("nonuniform",
                                   dict(slice_lens=(12, 8, 8, 4)))]:

@@ -210,7 +210,7 @@ _ALL_SCHEDULES_EQUIV = """
     lref = float(jax.jit(model.loss)(params, batch))
     gref = jax.grad(model.loss)(params, batch)
     for sched, V in [("contiguous", 1), ("interleaved", 2), ("1f1b", 1),
-                     ("interleaved-1f1b", 2)]:
+                     ("interleaved-1f1b", 2), ("zb-h1", 1)]:
         for desc, kw in [("uniform", dict(n_token_slices=4)),
                          ("nonuniform", dict(slice_lens=(12, 8, 8, 4)))]:
             with use_mesh(mesh):
@@ -230,12 +230,14 @@ _ALL_SCHEDULES_EQUIV = """
 
 @pytest.mark.parametrize("K,n_layers", [(2, 4), (4, 8)])
 def test_unified_executor_runs_every_schedule(K, n_layers):
-    """ISSUE 5 acceptance: the ONE executor entry point
-    (make_terapipe_value_and_grad) runs all four registered schedules —
+    """ISSUE 5/6 acceptance: the ONE executor entry point
+    (make_terapipe_value_and_grad) runs every registered schedule —
     including skew-buffered interleaved-1F1B, whose wrap-around chunk
-    handoffs ride the rings through K-tick skew buffers — and loss + every
-    grad leaf match the non-pipelined reference on K=2 and K=4, uniform
-    AND non-uniform DP slices."""
+    handoffs ride the rings through K-tick skew buffers, and zero-bubble
+    zb-h1, whose typed B/W units split each backward into an immediate
+    input-cotangent tick and a deferred weight-grad tick — and loss +
+    every grad leaf match the non-pipelined reference on K=2 and K=4,
+    uniform AND non-uniform DP slices."""
     out = _run_subprocess(devices=K,
                           code=_ALL_SCHEDULES_EQUIV.format(
                               K=K, n_layers=n_layers))
@@ -397,7 +399,7 @@ def test_vg_jaxpr_size_independent_of_DMV_every_schedule():
     length and the (constant) gather tables change.  The explicit-bwd
     schedules' per-unit-vjp tick must not re-trace per item either."""
     for sched, V in [("contiguous", 1), ("interleaved", 2), ("1f1b", 1),
-                     ("interleaved-1f1b", 2)]:
+                     ("interleaved-1f1b", 2), ("zb-h1", 1)]:
         small = _count_eqns(_trace_vg(4, sched, V, D=1, n_layers=4).jaxpr)
         bigM = _count_eqns(_trace_vg(32, sched, V, D=1, n_layers=4).jaxpr)
         bigD = _count_eqns(_trace_vg(4, sched, V, D=4, n_layers=4).jaxpr)

@@ -1,8 +1,13 @@
 """Hypothesis property tests over the schedule registry: every registered
-schedule's tick table validates across a (K, V, M, D) grid, and the
+schedule's tick table validates across a (K, V, M, D) grid, the
 ``peak_live_items()`` audit equals an independent brute-force live-residual
 replay of ``tick_table()`` (sets of (item, chunk) born at fwd ticks and
-retired at bwd ticks — or held to the drain for fwd-only tables).
+retired at their RETIRING kind's tick — fused BWD, or the deferred W for
+split-backward schedules; fwd-only tables retire nothing before the
+drain), and the typed unit kinds obey their structural invariants
+independently of ``validate()``: per (item, chunk) a FWD↔BWD bijection for
+fused-backward schedules, a FWD↔B↔W bijection with W strictly after B on
+B's own rank for split-backward schedules.
 
 Degrades to SKIP (never a collection error) when hypothesis is not
 installed — see tests/_hyp.py."""
@@ -11,8 +16,9 @@ import pytest
 
 from _hyp import HAS_HYPOTHESIS, given, settings, st  # noqa: F401
 
-from repro.core.schedules import (REGISTRY, ScheduleValidationError,
-                                  get_schedule)
+from repro.core.schedules import (KIND_BWD, KIND_BWD_INPUT, KIND_BWD_WEIGHT,
+                                  KIND_FWD, REGISTRY, RETIRING_KINDS,
+                                  ScheduleValidationError, get_schedule)
 
 KS = (1, 2, 3, 4, 8)
 VS = (1, 2, 3, 4)
@@ -37,25 +43,46 @@ def _build(name, K, V, D, M):
 def _replay_peak_live(assign, n_items):
     """Independent oracle for peak_live_items: replay the tick table per
     rank, tracking the set of (item, chunk) residuals that are live —
-    born when their fwd runs, retired AFTER their bwd tick (fwd-only
-    tables retire nothing before the drain)."""
+    born when their fwd runs, retired AFTER the tick of their RETIRING
+    kind (fused BWD, or the deferred W for split-backward schedules; the
+    split B tick reads the residual but must NOT release it — W still
+    replays it for the weight grads; fwd-only tables retire nothing
+    before the drain)."""
     tab = assign.tick_table(n_items)
     peak = 0
     for k in range(assign.n_ranks):
         live = set()
         for t in range(tab.shape[0]):
-            i, v, bwd = (int(x) for x in tab[t, k])
+            i, v, kind = (int(x) for x in tab[t, k])
             retire = None
             if i >= 0:
-                if bwd:
-                    assert (i, v) in live, (i, v, k, t)
-                    retire = (i, v)   # live THROUGH its own bwd tick
-                else:
+                if kind == KIND_FWD:
                     live.add((i, v))
+                else:
+                    assert (i, v) in live, (i, v, kind, k, t)
+                    if kind in RETIRING_KINDS:
+                        retire = (i, v)   # live THROUGH its retiring tick
             peak = max(peak, len(live))
             if retire is not None:
                 live.discard(retire)
     return peak
+
+
+def _kind_events(assign, n_items, rank):
+    """{kind: {(item, chunk): tick}} for one rank's row of the table,
+    asserting each (item, chunk, kind) occurs at most once on that rank.
+    Per-rank because every work item visits EVERY rank (one tick per
+    pipeline stage) — the FWD↔B↔W bijection is a per-rank property."""
+    tab = assign.tick_table(n_items)
+    events = {}
+    for t in range(tab.shape[0]):
+        i, v, kind = (int(x) for x in tab[t, rank])
+        if i < 0:
+            continue
+        per = events.setdefault(kind, {})
+        assert (i, v) not in per, (i, v, kind, rank)
+        per[(i, v)] = t
+    return events
 
 
 @pytest.mark.parametrize("name", sorted(REGISTRY))
@@ -84,3 +111,59 @@ def test_registered_schedule_smoke_grid(name):
         assert assign.validate(n_items) is True
         assert assign.peak_live_items(n_items) == _replay_peak_live(
             assign, n_items)
+
+
+def _check_kind_invariants(assign, n_items):
+    """Structural typed-kind invariants, independent of validate(), per
+    rank (every work item visits every rank):
+
+    * fwd-only tables carry only FWD units;
+    * fused-backward tables: FWD↔BWD bijection per (item, chunk), BWD
+      strictly after FWD, no split kinds;
+    * split-backward tables: FWD↔B↔W bijection per (item, chunk), B
+      strictly after FWD, W strictly after B on the SAME rank (W replays
+      the residual + cotangents the B tick left in that rank's rings —
+      the bijection holding per rank IS the same-rank property), no
+      fused BWD.
+    """
+    for rank in range(assign.n_ranks):
+        ev = _kind_events(assign, n_items, rank)
+        fwd = ev.get(KIND_FWD, {})
+        if not assign.has_backward:
+            assert set(ev) <= {KIND_FWD}, (rank, sorted(ev))
+            continue
+        if not assign.splits_backward:
+            assert set(ev) == {KIND_FWD, KIND_BWD}, (rank, sorted(ev))
+            bwd = ev[KIND_BWD]
+            assert set(bwd) == set(fwd), rank
+            for uc, t_b in bwd.items():
+                assert t_b > fwd[uc], (rank, uc)
+            continue
+        assert set(ev) == {KIND_FWD, KIND_BWD_INPUT,
+                           KIND_BWD_WEIGHT}, (rank, sorted(ev))
+        b, w = ev[KIND_BWD_INPUT], ev[KIND_BWD_WEIGHT]
+        assert set(b) == set(fwd) and set(w) == set(fwd), rank
+        for uc in fwd:
+            assert b[uc] > fwd[uc], (rank, uc)
+            assert w[uc] > b[uc], (rank, uc)   # W never precedes its B
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+@settings(max_examples=40, deadline=None)
+@given(K=st.sampled_from(KS), V=st.sampled_from(VS),
+       D=st.sampled_from(DS), M=st.sampled_from(MS))
+def test_registered_schedule_kind_invariants(name, K, V, D, M):
+    assign, n_items = _build(name, K, V, D, M)
+    if assign is None:
+        return
+    _check_kind_invariants(assign, n_items)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_registered_schedule_kind_invariants_smoke(name):
+    """Plain-pytest fallback for the kind invariants."""
+    for K, V, D, M in [(2, 2, 2, 2), (4, 2, 2, 4), (8, 2, 4, 2)]:
+        assign, n_items = _build(name, K, V, D, M)
+        if assign is None:
+            continue
+        _check_kind_invariants(assign, n_items)
