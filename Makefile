@@ -1,7 +1,7 @@
 # Tier-1 verification and common dev entry points.
 PY ?= python
 
-.PHONY: test test-full test-kernels bench-dp bench-smoke dryrun-executors
+.PHONY: test test-full test-kernels test-serve bench-dp bench-smoke dryrun-executors
 
 # tier-1 suite (the ROADMAP invocation, pinned here)
 test:
@@ -16,6 +16,11 @@ test-full:
 test-kernels:
 	PYTHONPATH=src REPRO_PALLAS_INTERPRET=1 $(PY) -m pytest -q -m kernels
 
+# serving subsystem alone: continuous-batching engine bit-identity,
+# paged-cache eviction/resume, and streaming-schedule trace audits
+test-serve:
+	PYTHONPATH=src $(PY) -m pytest -q -m serve
+
 bench-dp:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 
@@ -23,13 +28,16 @@ bench-dp:
 # cost-matrix check, the interleaved-schedule bubble assertions (incl.
 # interleaved-1f1b strictly beating plain 1f1b), the 1F1B-family compiled
 # peak-memory assertions (1f1b AND interleaved-1f1b flat in D vs
-# contiguous's growth), and the fused-attention HBM-linearity assertions
-# (no quadratic score matrix / repeated-KV buffers in fwd or bwd jaxprs)
+# contiguous's growth), the fused-attention HBM-linearity assertions
+# (no quadratic score matrix / repeated-KV buffers in fwd or bwd jaxprs),
+# and the serving assertion (continuous batching >= 2x sequential tokens/s
+# at batch 4 under Poisson arrivals)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 	PYTHONPATH=src $(PY) benchmarks/interleave_bench.py --assert-only
 	PYTHONPATH=src $(PY) benchmarks/memory_bench.py --quick
 	PYTHONPATH=src $(PY) benchmarks/kernel_bench.py --assert-only
+	PYTHONPATH=src $(PY) benchmarks/serve_bench.py --assert-only
 
 # rolled vs unrolled tick-executor trace/lower wall-time report
 dryrun-executors:

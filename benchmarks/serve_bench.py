@@ -1,0 +1,220 @@
+"""Serving benchmark (``BENCH_serve.json``): continuous batching vs the
+sequential baseline under a Poisson arrival process.
+
+Drives ``repro.serve.DecodeEngine`` round-by-round while requests arrive at
+Poisson-spaced rounds, and measures
+
+* **TTFT** — wall seconds from ``submit()`` to the request's first token
+  (the exit of its final prefill chunk), p50/p90 over the request set;
+* **aggregate tokens/s** — generated tokens over the measured wall time;
+* **cache occupancy** — the paged pool's used-page fraction sampled every
+  round (mean/peak): how well admission keeps the pool full.
+
+The sequential baseline is the SAME engine with ``max_concurrency=1`` on
+the SAME arrival trace — identical round shapes and code, one request in
+flight — so the speedup isolates continuous batching itself.  Each engine
+first drains a warm-up request set covering every prompt length, keeping
+jit compiles (one per chunk geometry + one decode round) out of the
+measured window.
+
+As with ``BENCH_schedules.json``, re-collecting folds the previous run's
+headline numbers into a bounded rev-keyed ``history`` list (same-rev
+re-runs replace their entry), so the serving-perf trajectory is tracked
+across PRs by diffing one file.
+
+``--assert-only`` (the ``bench-smoke`` / CI hook) runs a reduced workload
+and asserts the continuous engine's aggregate tokens/s beats the
+sequential baseline — ≥2× at the default batch of 4.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.models.common import ModelConfig
+from repro.serve import DecodeEngine, EngineConfig
+
+DEFAULT_OUT = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+
+#: past runs kept in the JSON's ``history`` list (newest last)
+HISTORY_KEEP = 20
+
+#: a small dense decoder — serving overheads, not model FLOPs, are under test
+CFG = ModelConfig(name="serve-bench", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  dtype=jnp.float32, remat=False)
+
+
+def _git_rev() -> str:
+    try:
+        r = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                           cwd=Path(__file__).resolve().parents[1],
+                           capture_output=True, text=True, timeout=30)
+        return r.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _workload(seed, n_requests, prompt_lens, gen, mean_gap):
+    """(arrival_round, prompt) pairs: Poisson-spaced arrivals over a fixed
+    prompt-length cycle (few distinct lengths = few chunk compiles)."""
+    rng = np.random.RandomState(seed)
+    gaps = rng.poisson(lam=mean_gap, size=n_requests)
+    arrivals = np.cumsum(gaps) - gaps[0]          # first arrives at round 0
+    reqs = []
+    for i in range(n_requests):
+        plen = prompt_lens[i % len(prompt_lens)]
+        prompt = rng.randint(0, CFG.vocab_size, size=plen).tolist()
+        reqs.append((int(arrivals[i]), prompt, gen))
+    return reqs
+
+
+def _drive(engine, reqs):
+    """Step the engine against the arrival trace; returns wall metrics."""
+    pending = list(reqs)
+    submit_t, ttft = {}, {}
+    occ = []
+    t0 = time.perf_counter()
+    while pending or engine.waiting or engine.running:
+        while pending and pending[0][0] <= engine.rounds:
+            _, prompt, gen = pending.pop(0)
+            rid = engine.submit(prompt, gen)
+            submit_t[rid] = time.perf_counter()
+        engine.step()
+        now = time.perf_counter()
+        for r in list(engine.running) + list(engine.finished.values()):
+            if r.prefilled and r.rid in submit_t and r.rid not in ttft:
+                ttft[r.rid] = now - submit_t[r.rid]
+        occ.append(engine.kv.occupancy)
+    wall = time.perf_counter() - t0
+    tokens = sum(len(r.generated) for r in engine.finished.values())
+    ts = sorted(ttft.values())
+    return {
+        "rounds": engine.rounds,
+        "tokens": tokens,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(tokens / wall, 2),
+        "ttft_p50_s": round(ts[len(ts) // 2], 4) if ts else None,
+        "ttft_p90_s": round(ts[int(len(ts) * 0.9)], 4) if ts else None,
+        "occupancy_mean": round(float(np.mean(occ)), 4) if occ else 0.0,
+        "occupancy_peak": round(float(np.max(occ)), 4) if occ else 0.0,
+    }
+
+
+def _run_mode(model, params, reqs, prompt_lens, *, batch, max_len,
+              sequential):
+    cfg = EngineConfig(max_batch=batch, max_len=max_len, page_size=8,
+                       n_pages=batch * (max_len // 8) + 1,
+                       max_concurrency=1 if sequential else None)
+    engine = DecodeEngine(model, params, cfg)
+    # warm-up: one short request per distinct prompt length compiles every
+    # chunk geometry plus the (single) decode-round shape outside the clock
+    for plen in prompt_lens:
+        engine.submit(list(range(plen % CFG.vocab_size, plen % CFG.vocab_size
+                                 + plen)), 2)
+    engine.run()
+    metrics = _drive(engine, reqs)
+    sched = engine.schedule()
+    sched.validate(len(engine.units))
+    metrics["trace_units"] = len(engine.units)
+    return metrics
+
+
+def collect(n_requests=12, prompt_lens=(24, 12), gen=12, mean_gap=1,
+            batch=4, max_len=64, seed=0, out_path=DEFAULT_OUT,
+            write=True):
+    model = build_model(CFG)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    reqs = _workload(seed, n_requests, prompt_lens, gen, mean_gap)
+
+    cont = _run_mode(model, params, reqs, prompt_lens, batch=batch,
+                     max_len=max_len, sequential=False)
+    seq = _run_mode(model, params, reqs, prompt_lens, batch=batch,
+                    max_len=max_len, sequential=True)
+    speedup = cont["tokens_per_s"] / seq["tokens_per_s"]
+    print(f"[serve-bench] continuous: {cont['tokens_per_s']:8.1f} tok/s "
+          f"({cont['rounds']} rounds, occ {cont['occupancy_mean']:.2f}, "
+          f"ttft_p50 {cont['ttft_p50_s']}s)", flush=True)
+    print(f"[serve-bench] sequential: {seq['tokens_per_s']:8.1f} tok/s "
+          f"({seq['rounds']} rounds, occ {seq['occupancy_mean']:.2f}, "
+          f"ttft_p50 {seq['ttft_p50_s']}s)", flush=True)
+    print(f"[serve-bench] speedup {speedup:.2f}x at batch={batch} "
+          f"({n_requests} requests, Poisson gap {mean_gap})", flush=True)
+
+    rev = _git_rev()
+    report = {
+        "rev": rev,
+        "config": {"n_requests": n_requests, "prompt_lens": list(prompt_lens),
+                   "gen": gen, "mean_gap": mean_gap, "batch": batch,
+                   "max_len": max_len, "model": CFG.name},
+        "continuous": cont,
+        "sequential": seq,
+        "speedup": round(speedup, 3),
+    }
+    if write:
+        history = []
+        if out_path.exists():
+            try:
+                prev = json.loads(out_path.read_text())
+                history = [h for h in prev.get("history", [])
+                           if h.get("rev") != rev]
+                if prev.get("rev") and prev["rev"] != rev:
+                    history.append({
+                        "rev": prev["rev"],
+                        "speedup": prev.get("speedup"),
+                        "continuous_tokens_per_s":
+                            prev.get("continuous", {}).get("tokens_per_s"),
+                        "ttft_p50_s":
+                            prev.get("continuous", {}).get("ttft_p50_s"),
+                    })
+                    print(f"[serve-bench] vs {prev['rev']}: speedup "
+                          f"{prev.get('speedup')}->{report['speedup']}",
+                          flush=True)
+            except (json.JSONDecodeError, OSError):
+                pass
+        report["history"] = history[-HISTORY_KEEP:]
+        out_path.write_text(json.dumps(report, indent=1) + "\n")
+        print(f"[serve-bench] wrote {out_path} (rev {rev}, "
+              f"{len(report['history'])} history entries)", flush=True)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mean-gap", type=int, default=1,
+                    help="mean Poisson inter-arrival, in rounds")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--assert-only", action="store_true",
+                    help="assert continuous beats sequential tokens/s "
+                         "(>=2x at batch >= 4); no JSON written")
+    args = ap.parse_args(argv)
+
+    if args.assert_only:
+        rep = collect(n_requests=args.requests, gen=args.gen,
+                      batch=args.batch, mean_gap=args.mean_gap,
+                      seed=args.seed, write=False)
+        floor = 2.0 if args.batch >= 4 else 1.0
+        assert rep["speedup"] >= floor, (
+            f"continuous batching {rep['speedup']:.2f}x sequential at "
+            f"batch={args.batch}; expected >= {floor}x")
+        print(f"[serve-bench] assert-only OK ({rep['speedup']:.2f}x >= "
+              f"{floor}x)", flush=True)
+        return
+    collect(n_requests=args.requests, gen=args.gen, batch=args.batch,
+            mean_gap=args.mean_gap, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

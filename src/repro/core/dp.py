@@ -131,6 +131,69 @@ def optimal_slicing(t_fwd: Callable[[int, int], float], L: int, K: int, *,
     return best
 
 
+def plan_prefill(t_fwd: Callable[[int, int], float], L: int, K: int, *,
+                 granularity: int = 1, eps: float = 1e-4,
+                 slo_tmax: Optional[float] = None) -> DPResult:
+    """Algorithm 1 re-targeted at SERVING prefill (repro.serve).
+
+    Training optimizes one objective: step latency (Eq. 5).  A serving
+    engine chunks each request's prefill and interleaves the chunks with
+    the decode rounds of already-running requests, so the chunk plan trades
+    TWO objectives: Σ t_i (the new request's time-to-first-token — fewer,
+    longer chunks amortize per-chunk overhead) against max t_i (the stall a
+    chunk inflicts on every in-flight request's inter-token latency — a
+    long chunk blocks the next token-synchronous decode round).
+
+    ``slo_tmax`` is the knob: the largest per-chunk stall the running
+    requests' latency SLO tolerates (seconds, same unit as ``t_fwd``).
+    The DP minimizes Eq. 5's objective over only the t_max candidates
+    ≤ ``slo_tmax`` — i.e. best TTFT subject to the stall bound.  With
+    ``slo_tmax=None`` (pure-throughput mode) this is exactly
+    :func:`optimal_slicing`.  If NO plan satisfies the SLO (even single
+    granules stall longer than allowed, or no SLO-feasible bound tiles
+    the whole length), the constraint is dropped and the unconstrained
+    optimum returned as best effort — the engine cannot refuse to
+    prefill.
+    """
+    if slo_tmax is None:
+        return optimal_slicing(t_fwd, L, K, granularity=granularity, eps=eps)
+    g = granularity
+    assert L % g == 0, (L, g)
+    n = L // g
+    T = _cost_matrix(t_fwd, L, g)
+    vals = np.unique(T[np.isfinite(T)])
+    feasible = [float(v) for v in vals if v <= slo_tmax]
+    if not feasible:
+        # SLO unsatisfiable even by single granules: drop the constraint
+        return optimal_slicing(t_fwd, L, K, granularity=g, eps=eps)
+    cands, last = [], -np.inf
+    for v in feasible:
+        if v >= last + eps:
+            cands.append(v)
+            last = v
+    if cands[-1] != feasible[-1]:    # largest must survive thinning
+        cands.append(feasible[-1])
+    best = DPResult(np.inf, [], np.inf)
+    evaluated = 0
+    for t_max in cands:
+        if K * t_max >= best.latency:    # early stop, as optimal_slicing
+            break
+        evaluated += 1
+        total, slices = _dp_fixed_tmax(T, n, t_max)
+        if slices is None:
+            continue
+        real_tmax = max(T[l, c] for l, c in _iter_lc(slices))
+        latency = total + (K - 1) * real_tmax
+        if latency < best.latency:
+            best = DPResult(latency, [l * g for l in slices], real_tmax)
+    if not best.slices:
+        # every SLO-feasible t_max admitted no full tiling (late-context
+        # granules alone exceed the bound): best effort = minimal stall
+        return optimal_slicing(t_fwd, L, K, granularity=g, eps=eps)
+    best.n_tmax_evaluated = evaluated
+    return best
+
+
 def _iter_lc(slices_units: Sequence[int]):
     c = 0
     for l in slices_units:

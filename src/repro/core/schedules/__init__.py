@@ -77,6 +77,8 @@ from .ir import (BWD_RING_KINDS, KIND_BWD, KIND_BWD_INPUT,  # noqa: F401
                  contiguous, interleave_stacked, interleaved,
                  interleaved_one_f_one_b, kind_name, one_f_one_b,
                  uninterleave_stacked, zb_h1)
+from .streaming import (StreamingSchedule, StreamUnit,  # noqa: F401
+                        decode_round, prefill_unit, streaming)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,13 +176,22 @@ register_schedule(ScheduleSpec(
          "(input-cotangent) and W (weight-grad) units; W fills the drain",
     has_backward=True, splits_backward=True,
 ))
+register_schedule(ScheduleSpec(
+    name="streaming",
+    factory=lambda K, V, n, D: StreamingSchedule(K, 1, n),
+    help="fwd-only serving flow (V=1): the tick table is generated from a "
+         "live request queue (prefill chunks + token-synchronous decode "
+         "rounds; see core/schedules/streaming.py and repro.serve)",
+))
 
 
 __all__ = ["BWD_RING_KINDS", "CommPlan", "InterleavedOneFOneB", "KIND_BWD",
            "KIND_BWD_INPUT", "KIND_BWD_WEIGHT", "KIND_FWD", "KIND_IDLE",
            "OneFOneB", "REGISTRY", "RETIRING_KINDS", "ScheduleSpec",
-           "ScheduleValidationError", "StageAssignment", "ZeroBubbleH1",
-           "check_virtual_stages", "contiguous", "get_schedule",
+           "ScheduleValidationError", "StageAssignment", "StreamUnit",
+           "StreamingSchedule", "ZeroBubbleH1", "check_virtual_stages",
+           "contiguous", "decode_round", "get_schedule",
            "interleave_stacked", "interleaved", "interleaved_one_f_one_b",
-           "kind_name", "one_f_one_b", "register_schedule", "schedule_help",
-           "schedule_names", "uninterleave_stacked", "zb_h1"]
+           "kind_name", "one_f_one_b", "prefill_unit", "register_schedule",
+           "schedule_help", "schedule_names", "streaming",
+           "uninterleave_stacked", "zb_h1"]

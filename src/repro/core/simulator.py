@@ -29,6 +29,10 @@ Two engines:
     (``schedules.InterleavedOneFOneB``): the same parity mix, but
     chunk-sized (1/V) fill/drain — a strictly smaller bubble fraction than
     plain 1f1b on the same scheme.
+  - ``streaming`` — the fwd-only serving flow
+    (``schedules.StreamingSchedule``): each work item is one queue unit
+    (prefill chunk or decode round); :func:`simulate_stream` additionally
+    reports TTFT and inter-token latency per request.
   - ``zb-h1`` — the zero-bubble split-backward table
     (``schedules.ZeroBubbleH1``): B (input-grad) and W (weight-grad) units
     priced separately, so no tick pays more than max(fwd, B, W) — the
@@ -54,10 +58,13 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+import dataclasses
+
 from .cost_model import CostModel
 from .schedule import SlicingScheme
 from .schedules import (KIND_BWD, KIND_BWD_INPUT, KIND_BWD_WEIGHT, KIND_FWD,
-                        REGISTRY, StageAssignment, get_schedule)
+                        REGISTRY, StageAssignment, StreamingSchedule,
+                        get_schedule)
 
 #: bwd ≈ 2·fwd (two matmuls per fwd matmul), the convention _work_items uses
 BWD_COST_FACTOR = 2.0
@@ -205,6 +212,14 @@ def _discipline_total(items, K: int, discipline: str, virtual_stages: int,
         assert virtual_stages == 1, \
             "use discipline='interleaved' for V>1 lockstep schedules"
         return _lockstep_total(items, K, 1, slow)
+    if discipline == "streaming":
+        # the serving flow: each flattened work item is one queue unit of
+        # the fwd-only streaming table (contiguous V=1 flow, no backward
+        # ever) — the lockstep price of pushing the queue through K stages
+        assert virtual_stages == 1, \
+            "streaming is a V=1 schedule (single-token decode units)"
+        return _table_total(StreamingSchedule(n_ranks=K, virtual_stages=1,
+                                              n_layers=1), items, slow)
     if discipline == "interleaved":
         return _lockstep_total(items, K, virtual_stages, slow)
     if _explicit_bwd(discipline):
@@ -299,6 +314,78 @@ def bubble_fraction(scheme: SlicingScheme, K: int, t_of, *,
     T = _discipline_total(items, K, discipline, virtual_stages, slow)
     work = float(np.sum(items)) * float(np.max(slow))
     return (T - work) / T
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamReport:
+    """What the ``streaming`` discipline prices for a queue snapshot.
+
+    ``ttft``        — request id -> time-to-first-token: the wall-clock at
+                      which the request's first generated token is known —
+                      its FINAL prefill unit exits rank K-1 (the engine
+                      reads the first token off the last chunk's logits),
+                      or its first decode unit for requests whose prefill
+                      lies outside the snapshot.
+    ``finish``      — request id -> exit time of the request's last unit.
+    ``round_times`` — exit time of every decode round, in queue order (the
+                      diffs are the stream's inter-token latencies).
+    ``total``       — wall-clock of the whole snapshot (last tick ends).
+    ``tokens``      — total tokens processed (prefill + decode).
+    """
+    ttft: dict
+    finish: dict
+    round_times: List[float]
+    total: float
+    tokens: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.total if self.total > 0 else 0.0
+
+
+def simulate_stream(schedule: StreamingSchedule, t_unit, *,
+                    stage_slowdown: Optional[Sequence[float]] = None
+                    ) -> StreamReport:
+    """Price a streaming queue snapshot under the lockstep engine and report
+    the SERVING metrics (TTFT, inter-token latency) that ``simulate``'s
+    single total hides.
+
+    ``t_unit(u) -> seconds`` prices one :class:`StreamUnit` on one stage
+    (e.g. ``lambda u: cost.t_fwd(len(u.rids), u.length, max(u.ctx))``).
+    The streaming table is the contiguous V=1 flow — unit ``j`` occupies
+    rank ``k`` at tick ``j + k`` — so tick ``t`` costs ``max_k
+    t_unit(units[t-k])·slow[k]`` and unit ``j`` exits the pipeline at the
+    end of tick ``j + K - 1``.  A request's TTFT is the exit time of its
+    final prefill chunk — the engine reads the first generated token off
+    that chunk's last-position logits — or of its first decode unit when
+    the snapshot starts mid-stream."""
+    units = schedule.units
+    assert units, "simulate_stream needs a schedule built over a queue " \
+        "snapshot (units=...); the anonymous registry factory has none"
+    K = schedule.n_ranks
+    slow = (np.ones(K) if stage_slowdown is None
+            else np.asarray(stage_slowdown, np.float64))
+    assert len(slow) == K
+    costs = np.asarray([float(t_unit(u)) for u in units], np.float64)
+    M = costs.size
+    # tick t's active units are t-k for k in [0, K): one vectorized gather
+    ticks = np.arange(M + K - 1)[:, None] - np.arange(K)[None, :]
+    live = (ticks >= 0) & (ticks < M)
+    dur = np.where(live, costs[np.clip(ticks, 0, M - 1)] * slow[None, :], 0.0)
+    end = np.cumsum(dur.max(axis=1))          # wall-clock at end of tick t
+    exit_t = end[np.arange(M) + K - 1]        # unit j exits at tick j+K-1
+    ttft, finish, round_times = {}, {}, []
+    for j, u in enumerate(units):
+        t = float(exit_t[j])
+        if u.kind == "decode":
+            round_times.append(t)
+        for rid in u.rids:
+            if (u.kind == "prefill" and u.final) or u.kind == "decode":
+                ttft.setdefault(rid, t)
+            finish[rid] = t
+    tokens = sum(u.tokens for u in units)
+    return StreamReport(ttft=ttft, finish=finish, round_times=round_times,
+                        total=float(end[-1]), tokens=tokens)
 
 
 def eq5_latency(slices: List[int], K: int, t_fwd) -> float:

@@ -30,7 +30,10 @@ def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, s_scr,
                    acc_scr, *, blk_kv: int, scale: float):
     ikv = pl.program_id(2)
     n_kv = pl.num_programs(2)
-    kv_len = kvlen_ref[0]
+    # per-BATCH valid length (continuous batching serves requests at
+    # heterogeneous context depths in one round); scalar callers are
+    # broadcast to (B,) by the wrapper
+    kv_len = kvlen_ref[pl.program_id(0)]
 
     @pl.when(ikv == 0)
     def _init():
@@ -68,7 +71,8 @@ def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, s_scr,
 def decode_attention_kernel(q, k, v, kv_len, *,
                             blk_kv: int = DEFAULT_BLOCK_KV,
                             interpret: bool = False):
-    """q: (B, 1, Hq, hd); k, v: (B, L, Hkv, hd); kv_len: scalar int32.
+    """q: (B, 1, Hq, hd); k, v: (B, L, Hkv, hd); kv_len: scalar int32 OR a
+    per-batch (B,) vector (continuous-batching rounds mix context depths).
     GQA is resolved in the BlockSpec index map — no K/V expansion."""
     b, one, hq, hd = q.shape
     assert one == 1
@@ -81,7 +85,8 @@ def decode_attention_kernel(q, k, v, kv_len, *,
         v = jnp.pad(v, ((0, 0), (0, L_pad), (0, 0), (0, 0)))
     Lp = L + L_pad
     scale = 1.0 / math.sqrt(hd)
-    kv_len_arr = jnp.full((1,), kv_len, jnp.int32)
+    kv_len_arr = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
 
     grid = (b, hq, Lp // blk_kv)
     out = pl.pallas_call(

@@ -82,6 +82,8 @@ def terapipe_attention(q, k, v, *, ctx_len,
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      kv_len) -> jnp.ndarray:
-    """Flash decode: q (B,1,Hq,hd) vs cache (B,L,Hkv,hd) valid to kv_len.
-    GQA resolved inside the kernel's BlockSpec index map (no K/V repeat)."""
+    """Flash decode: q (B,1,Hq,hd) vs cache (B,L,Hkv,hd) valid to kv_len —
+    a scalar, or a per-batch (B,) vector for continuous-batching rounds
+    that mix context depths.  GQA resolved inside the kernel's BlockSpec
+    index map (no K/V repeat)."""
     return decode_attention_kernel(q, k, v, kv_len, interpret=_INTERPRET)

@@ -233,13 +233,19 @@ def attn_sliced_dyn(p, cfg: ModelConfig, x_slice: jnp.ndarray, kv_cache, ctx,
 
 def attn_decode(p, cfg: ModelConfig, x_tok: jnp.ndarray, kv_cache, pos: jnp.ndarray,
                 *, window: int = 0, ring: bool = False):
-    """One-token decode. x_tok (B, 1, D); pos scalar int32 (current position).
+    """One-token decode. x_tok (B, 1, D); pos scalar int32 (current position)
+    OR a per-batch (B,) vector — a continuous-batching round where every
+    slot sits at its own context depth (repro.serve).
 
     kv_cache: (k, v) each (B, L_max, kv_heads, hd).
     ring=True: L_max == window and the cache is a ring buffer indexed by
     ``pos % window`` (bounded memory for local-attention archs at 500k+ ctx).
     """
     b = x_tok.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim > 0:
+        return _attn_decode_batched(p, cfg, x_tok, kv_cache, pos,
+                                    window=window, ring=ring)
     positions = jnp.full((b, 1), pos, dtype=jnp.int32)
     q, k, v = _project_qkv(p, cfg, x_tok, positions, rope=cfg.rope_theta > 0)
     ck, cv = kv_cache
@@ -264,6 +270,36 @@ def attn_decode(p, cfg: ModelConfig, x_tok: jnp.ndarray, kv_cache, pos: jnp.ndar
             valid &= kp > pos - window
         out = attention_scores_gqa(q, ck.astype(q.dtype), cv.astype(q.dtype),
                                    mask=valid[None])             # (1, 1, Lmax)
+    return _out_proj(p, cfg, out, b, 1, x_tok.dtype), (ck, cv)
+
+
+def _attn_decode_batched(p, cfg: ModelConfig, x_tok: jnp.ndarray, kv_cache,
+                         pos: jnp.ndarray, *, window: int, ring: bool):
+    """attn_decode with a per-batch (B,) position vector: each slot writes
+    its token at its OWN cache depth and attends over its own valid prefix.
+    Every op is row-independent, so slot b's output depends only on slot
+    b's inputs — the bit-identity the serving engine's continuous-vs-
+    sequential contract rests on."""
+    assert not ring, "ring caches decode a single stream (scalar pos)"
+    b = x_tok.shape[0]
+    positions = pos[:, None]                                   # (B, 1)
+    q, k, v = _project_qkv(p, cfg, x_tok, positions, rope=cfg.rope_theta > 0)
+    ck, cv = kv_cache
+    lmax = ck.shape[1]
+    rows = jnp.arange(b)
+    ck = ck.at[rows, pos].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[rows, pos].set(v[:, 0].astype(cv.dtype))
+    if cfg.use_kernel and window == 0:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                    pos + 1)
+    else:
+        kp = jnp.arange(lmax)[None, :]
+        valid = kp <= positions                                # (B, Lmax)
+        if window:
+            valid &= kp > positions - window
+        out = attention_scores_gqa(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                   mask=valid[:, None, :])     # (B, 1, Lmax)
     return _out_proj(p, cfg, out, b, 1, x_tok.dtype), (ck, cv)
 
 

@@ -1,0 +1,14 @@
+"""Serving subsystem: continuous-batching decode on the schedule IR.
+
+``DecodeEngine`` (engine.py) runs the admit → prefill-chunk → decode-round
+loop; ``PagedKVCache`` (kv_cache.py) backs it with a vLLM-style page pool;
+the work trace is a real ``streaming`` schedule (``core/schedules``) whose
+``validate()`` audits the serving invariants and whose
+``simulator.simulate_stream`` prices TTFT / inter-token latency.
+"""
+from .engine import DecodeEngine, EngineConfig, Request
+from .kv_cache import (PagedKVCache, gather_pages, scatter_prefill,
+                       scatter_token)
+
+__all__ = ["DecodeEngine", "EngineConfig", "PagedKVCache", "Request",
+           "gather_pages", "scatter_prefill", "scatter_token"]

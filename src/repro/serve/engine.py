@@ -1,0 +1,311 @@
+"""Continuous-batching decode engine on the schedule IR.
+
+The loop every serving system runs — admit, prefill, decode, complete —
+expressed with this repo's parts instead of a fork of them:
+
+* **prefill** is TeraPipe token slicing: a new request's prompt is chunked
+  by ``dp.plan_prefill`` (Algorithm 1 re-targeted at the TTFT-vs-stall
+  trade, ``slo_tmax`` knob) and each chunk runs the SAME sliced stage
+  computation the pipeline executor interprets (``apply_groups_sliced``
+  at the chunk's context offset);
+* **decode** is token-synchronous: every round, all in-flight requests
+  advance one token through ``model.decode_step`` with a per-slot position
+  vector — one fixed-shape jitted call whose rows are independent;
+* **KV** lives in the paged pool (:mod:`repro.serve.kv_cache`) — gathered
+  to the dense view each call, with only the newly-produced positions
+  scattered back;
+* every unit of work is appended to a :class:`StreamUnit` trace, so
+  ``engine.schedule()`` is a real ``streaming`` schedule whose
+  ``validate()`` audits both the IR's ring delivery and the serving
+  invariants (no decode before prefill, contiguous chunks).
+
+Bit-identity contract (the engine's correctness anchor): every round runs
+at the SAME fixed shape — ``max_batch`` slots, per-slot position vector,
+active mask — and every per-slot op is row-independent, so a request's
+output tokens depend only on its own prompt.  The sequential baseline is
+THIS engine with ``max_concurrency=1``: same shapes, same code, one
+request in flight — continuous batching must reproduce its tokens
+bit-for-bit while finishing in ~``max_batch``× fewer rounds.
+
+Preemption (``preempt()``) frees a request's batch SLOT but keeps its KV
+pages, so re-admission resumes decoding from the paged cache — no
+re-prefill.  Completion frees pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp as dp_mod
+from repro.core.schedules import (StreamingSchedule, StreamUnit,
+                                  decode_round, prefill_unit, streaming)
+from repro.models.lm import apply_groups_sliced
+
+from .kv_cache import (PagedKVCache, gather_pages, scatter_prefill,
+                       scatter_token)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its in-flight state."""
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+    # -- engine state --
+    ctx: int = 0                     # tokens whose KV exists in the pages
+    chunks: List[int] = dataclasses.field(default_factory=list)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    next_token: Optional[int] = None  # pending input of the next round
+    slot: int = -1
+    prefilled: bool = False
+    submit_round: int = -1
+    first_token_round: int = -1
+    finish_round: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine geometry and policy.
+
+    ``max_batch``       — decode-round slot count (the fixed round shape).
+    ``max_concurrency`` — admission cap; ``None`` = ``max_batch``.  ``1``
+                          is the sequential baseline every bit-identity
+                          claim is measured against.
+    ``max_len``         — per-request logical cache length (page-aligned);
+                          a request needs ``len(prompt) + max_new - 1``
+                          of it.
+    ``n_pages`` / ``page_size`` — the physical pool (page 0 reserved).
+    ``slo_tmax``        — the SLO knob, in units of the chunk cost model
+                          ``overhead + l·(ctx+l)``: the largest per-chunk
+                          stall in-flight requests tolerate.  ``None`` =
+                          pure throughput (one chunk per prompt — best own
+                          TTFT, worst stall).
+    ``chunk_overhead``  — per-chunk launch cost in the same units (keeps
+                          the DP from shattering prompts into 1-token
+                          chunks when the SLO is loose).
+    ``n_ranks``         — notional pipeline depth for the DP plan and the
+                          ``streaming``-schedule trace (this reference
+                          engine computes single-process; the trace +
+                          ``simulate_stream`` price the K-stage run).
+    """
+    max_batch: int = 4
+    max_len: int = 128
+    page_size: int = 16
+    n_pages: int = 64
+    n_ranks: int = 1
+    slo_tmax: Optional[float] = None
+    chunk_overhead: float = 32.0
+    max_concurrency: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.max_len % self.page_size == 0, \
+            (self.max_len, self.page_size)
+        cap = self.max_concurrency
+        assert cap is None or 1 <= cap <= self.max_batch, cap
+
+
+class DecodeEngine:
+    """Continuous-batching engine over one model + params (see module doc).
+
+    Drive it with :meth:`submit` + :meth:`run` (or :meth:`step` per round
+    when interleaving with an arrival process, as ``serve_bench`` does).
+    """
+
+    def __init__(self, model, params, cfg: EngineConfig):
+        assert model.cfg.family == "dense", (
+            f"serve engine drives the dense decoder family (paged caches "
+            f"are (k, v) pairs); got family={model.cfg.family!r}")
+        self.model, self.params, self.cfg = model, params, cfg
+        dtype = (model.cfg.dtype if model.cfg.dtype != jnp.float32
+                 else jnp.float32)
+        self.kv = PagedKVCache(model, n_pages=cfg.n_pages,
+                               page_size=cfg.page_size,
+                               max_len=cfg.max_len, dtype=dtype)
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []          # admission order
+        self.finished: Dict[int, Request] = {}
+        self.units: List[StreamUnit] = []
+        self.rounds = 0
+        self._slots = list(range(cfg.max_batch))  # free slots, ascending
+        self._next_rid = 0
+
+        def _round(params, phys, table, tokens, pos, active):
+            dense = gather_pages(phys, table)
+            logits, dense = model.decode_step(
+                params, dense, {"tokens": tokens[:, None]}, pos)
+            phys = scatter_token(phys, dense, table, pos, active)
+            return phys, jnp.argmax(logits[:, -1, :], axis=-1)
+
+        def _chunk(params, phys, table_row, tokens_chunk, ctx):
+            dense = gather_pages(phys, table_row[None, :])
+            batch = {"tokens": tokens_chunk[None, :]}
+            x = model.embed(params, batch, ctx)
+            x, dense = apply_groups_sliced(model, params, x, dense, ctx)
+            phys = scatter_prefill(phys, dense, table_row, ctx,
+                                   tokens_chunk.shape[0])
+            return phys, model.head(params, x[:, -1:, :])[0, -1]
+
+        # one compile per (max_batch, pool) geometry; _chunk retraces per
+        # (chunk length, ctx) pair — chunk plans repeat across requests
+        self._round = jax.jit(_round)
+        self._chunk = jax.jit(_chunk, static_argnums=(4,))
+
+    # ------------------------------------------------------------ intake
+    def _plan_chunks(self, prompt_len: int) -> List[int]:
+        """Prefill chunk plan: DP under the SLO stall bound, or one chunk
+        in pure-throughput mode."""
+        if self.cfg.slo_tmax is None or prompt_len == 1:
+            return [prompt_len]
+        oh = self.cfg.chunk_overhead
+        plan = dp_mod.plan_prefill(
+            lambda l, c: oh + l * (c + l), prompt_len, self.cfg.n_ranks,
+            slo_tmax=self.cfg.slo_tmax)
+        return list(plan.slices)
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival: float = 0.0) -> int:
+        """Queue a request; returns its id.  Tokens appear in
+        ``finished[rid].generated`` once it completes."""
+        prompt = [int(t) for t in prompt]
+        assert prompt and max_new_tokens >= 1
+        assert len(prompt) + max_new_tokens - 1 <= self.cfg.max_len, (
+            f"prompt {len(prompt)} + {max_new_tokens} new tokens exceeds "
+            f"max_len {self.cfg.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        r = Request(rid, prompt, max_new_tokens, arrival,
+                    chunks=self._plan_chunks(len(prompt)))
+        r.submit_round = self.rounds
+        self.waiting.append(r)
+        return rid
+
+    # ------------------------------------------------------------ rounds
+    def _admit(self) -> None:
+        cap = self.cfg.max_concurrency or self.cfg.max_batch
+        while self.waiting and self._slots and len(self.running) < cap:
+            r = self.waiting[0]
+            # fresh: pages for the whole prompt; resumed: its pages exist,
+            # the next decode write may need one more
+            need = max(len(r.prompt), r.ctx + 1)
+            if not self.kv.can_ensure(r.rid, need):
+                break
+            self.kv.ensure(r.rid, need)
+            self.waiting.pop(0)
+            r.slot = self._slots.pop(0)
+            self.running.append(r)
+
+    def _prefill_one(self) -> None:
+        """Run ONE prefill chunk per round: the SLO knob bounded its
+        length, so this is the stall in-flight requests actually see."""
+        for r in self.running:
+            if not r.chunks:
+                continue
+            length = r.chunks.pop(0)
+            tokens = jnp.asarray(r.prompt[r.ctx:r.ctx + length], jnp.int32)
+            row = jnp.asarray(self.kv.table_row(r.rid))
+            self.kv.phys, last_logits = self._chunk(
+                self.params, self.kv.phys, row, tokens, r.ctx)
+            final = not r.chunks
+            self.units.append(prefill_unit(r.rid, r.ctx, length, final))
+            r.ctx += length
+            if final:
+                r.prefilled = True
+                r.first_token_round = self.rounds
+                tok = int(jax.device_get(jnp.argmax(last_logits)))
+                r.generated.append(tok)
+                r.next_token = tok
+                self._maybe_finish(r)
+            return
+
+    def _decode_round(self) -> None:
+        live = [r for r in self.running if r.prefilled and not r.done]
+        # each slot writes its token's KV at pos=ctx; a request whose pool
+        # growth would fail skips rounds until a sibling frees pages
+        ready = [r for r in live if self.kv.can_ensure(r.rid, r.ctx + 1)]
+        if live and not ready:
+            raise MemoryError(
+                f"all {len(live)} in-flight requests blocked on KV pages "
+                f"({self.kv.free_pages} free of {self.cfg.n_pages - 1}); "
+                f"pool too small for the admitted working set")
+        if not ready:
+            return
+        for r in ready:
+            self.kv.ensure(r.rid, r.ctx + 1)
+        B = self.cfg.max_batch
+        tokens = np.zeros(B, np.int32)
+        pos = np.zeros(B, np.int32)
+        active = np.zeros(B, bool)
+        rids = [-1] * B
+        for r in ready:
+            tokens[r.slot] = r.next_token
+            pos[r.slot] = r.ctx
+            active[r.slot] = True
+            rids[r.slot] = r.rid
+        table = jnp.asarray(self.kv.table_array(rids))
+        self.kv.phys, nxt = self._round(
+            self.params, self.kv.phys, table, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(active))
+        nxt = np.asarray(jax.device_get(nxt))
+        self.units.append(decode_round([r.rid for r in ready],
+                                       [r.ctx for r in ready]))
+        for r in ready:
+            r.ctx += 1
+            tok = int(nxt[r.slot])
+            r.generated.append(tok)
+            r.next_token = tok
+            self._maybe_finish(r)
+
+    def _maybe_finish(self, r: Request) -> None:
+        if not r.done:
+            return
+        r.finish_round = self.rounds
+        self.kv.free(r.rid)
+        self.running.remove(r)
+        self._slots.append(r.slot)
+        self._slots.sort()
+        r.slot = -1
+        self.finished[r.rid] = r
+
+    def preempt(self, rid: int) -> None:
+        """Evict a running request: free its SLOT, keep its KV pages.  It
+        rejoins the head of the waiting queue and resumes decoding from
+        the paged cache on re-admission (no re-prefill)."""
+        r = next(x for x in self.running if x.rid == rid)
+        self.running.remove(r)
+        self._slots.append(r.slot)
+        self._slots.sort()
+        r.slot = -1
+        self.waiting.insert(0, r)
+
+    def step(self) -> None:
+        """One engine round: admit under the memory budget, run one
+        SLO-bounded prefill chunk, run one token-synchronous decode
+        round."""
+        self._admit()
+        self._prefill_one()
+        self._decode_round()
+        self.rounds += 1
+
+    def run(self, max_rounds: int = 100_000) -> None:
+        """Drive rounds until every submitted request finished."""
+        while self.waiting or self.running:
+            assert self.rounds < max_rounds, "engine failed to drain"
+            self.step()
+
+    # ------------------------------------------------------------- trace
+    def schedule(self) -> StreamingSchedule:
+        """The run's work trace as a real ``streaming`` schedule —
+        ``validate()`` audits ring delivery AND the serving invariants;
+        ``simulator.simulate_stream`` prices its TTFT/latency at
+        ``n_ranks`` pipeline stages."""
+        return streaming(self.cfg.n_ranks, self.model.cfg.n_layers,
+                         tuple(self.units))

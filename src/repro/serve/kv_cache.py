@@ -1,0 +1,180 @@
+"""Paged KV cache for the serving engine (vLLM-style paging on the repo's
+dense cache pytrees).
+
+The model's decode caches are dense per-slot arrays ``(count, batch,
+max_len, kv_heads, hd)`` — fine for one training batch, wasteful for a
+serving mix of requests at wildly different context depths.  This module
+stores KV in fixed-size **pages**: every cache leaf becomes a physical pool
+``(count, n_pages, page_size, ...tail)`` plus per-request **page tables**
+(logical page ``i`` of request ``r`` lives in physical page
+``table[r][i]``).  Admission allocates pages, growth allocates lazily one
+page at a time, completion frees them — and PREEMPTION does not: an evicted
+request keeps its pages, so re-admission resumes decoding from the paged
+cache instead of re-running prefill.
+
+The engine computes on the DENSE view: :func:`gather_pages` reassembles a
+request batch's logical caches from the pool (pure gather — values are
+identical no matter which physical pages back them, which is what makes
+continuous-vs-sequential bit-identity possible), the model's
+``decode_step``/sliced stages run unchanged on that view, and
+:func:`scatter_token` / :func:`scatter_prefill` write back only the
+newly-produced positions.
+
+Physical page 0 is RESERVED as a permanent zero dummy: unallocated page-
+table entries (and the page tables of inactive batch slots) point at it, so
+the masked write-back of an inactive slot lands on page 0 — where it
+rewrites the old value — and can never collide with a live request's page.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _paged_leaf(leaf: jnp.ndarray, n_pages: int) -> jnp.ndarray:
+    """(count, 1, page_size, ...tail) template -> (count, n_pages,
+    page_size, ...tail) physical pool, zero-filled (page 0 must be zeros
+    forever; see module doc)."""
+    count, _, page_size = leaf.shape[:3]
+    return jnp.zeros((count, n_pages, page_size) + leaf.shape[3:],
+                     leaf.dtype)
+
+
+def gather_pages(phys, table: jnp.ndarray):
+    """Reassemble dense logical caches from the pool.
+
+    ``table`` is int32 ``(B, P)`` (request-slot page tables, padded with the
+    reserved page 0); each leaf ``(count, n_pages, ps, ...)`` gathers to
+    ``(count, B, P·ps, ...)`` — the exact dense cache layout the model's
+    decode/sliced paths expect, with ``max_len = P·ps``."""
+    b, p = table.shape
+
+    def g(leaf):
+        count, _, ps = leaf.shape[:3]
+        out = leaf[:, table]                     # (count, B, P, ps, ...)
+        return out.reshape((count, b, p * ps) + leaf.shape[3:])
+    return jax.tree_util.tree_map(g, phys)
+
+
+def scatter_token(phys, dense, table: jnp.ndarray, pos: jnp.ndarray,
+                  active: jnp.ndarray):
+    """Write one decoded token per batch slot back to the pool.
+
+    ``dense`` is the post-``decode_step`` dense view (slot ``b`` holds its
+    new KV at position ``pos[b]``); only that single position is written
+    back, to physical page ``table[b, pos[b]//ps]`` slot ``pos[b]%ps``.
+    Inactive slots write their target's OLD value (a no-op) — and their
+    page tables point at reserved page 0, so even that no-op cannot touch a
+    live page."""
+    b = table.shape[0]
+    rows = jnp.arange(b)
+
+    def s(pleaf, dleaf):
+        ps = pleaf.shape[2]
+        pids = table[rows, pos // ps]            # (B,)
+        slots = pos % ps
+        new = dleaf[:, rows, pos]                # (count, B, ...tail)
+        old = pleaf[:, pids, slots]
+        keep = active.reshape((1, b) + (1,) * (new.ndim - 2))
+        return pleaf.at[:, pids, slots].set(jnp.where(keep, new, old))
+    return jax.tree_util.tree_map(s, phys, dense)
+
+
+def scatter_prefill(phys, dense, table_row: jnp.ndarray, ctx: int,
+                    length: int):
+    """Write one request's prefill chunk ``[ctx, ctx+length)`` back to the
+    pool (``dense`` is that request's B=1 dense view after the sliced
+    stage ran)."""
+    positions = ctx + jnp.arange(length)
+
+    def s(pleaf, dleaf):
+        ps = pleaf.shape[2]
+        pids = table_row[positions // ps]
+        slots = positions % ps
+        return pleaf.at[:, pids, slots].set(dleaf[:, 0, positions])
+    return jax.tree_util.tree_map(s, phys, dense)
+
+
+class PagedKVCache:
+    """Page pool + allocator + per-request page tables.
+
+    ``phys`` (the jax pytree pool) is functional state: the engine threads
+    it through the jitted round functions and stores the result back.  The
+    allocator (free list, page tables) is host-side Python — page ids are
+    shapes-of-work, not traced data.
+    """
+
+    def __init__(self, model, *, n_pages: int, page_size: int,
+                 max_len: int, dtype=jnp.bfloat16):
+        assert n_pages >= 2, "need at least one allocatable page past the " \
+            "reserved dummy (page 0)"
+        assert max_len % page_size == 0, (max_len, page_size)
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.max_len = max_len
+        self.pages_per_slot = max_len // page_size
+        template = model.init_caches(1, page_size, dtype=dtype)
+        self.phys = jax.tree_util.tree_map(
+            lambda leaf: _paged_leaf(leaf, n_pages), template)
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))  # pop() = 1
+        self._tables: Dict[int, List[int]] = {}
+
+    # ---------------------------------------------------------- allocator
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.used_pages / (self.n_pages - 1)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.page_size)
+
+    def capacity(self, rid: int) -> int:
+        """Tokens the request's current pages can hold."""
+        return len(self._tables.get(rid, ())) * self.page_size
+
+    def can_ensure(self, rid: int, n_tokens: int) -> bool:
+        need = self.pages_for(n_tokens) - len(self._tables.get(rid, ()))
+        return need <= len(self._free)
+
+    def ensure(self, rid: int, n_tokens: int) -> None:
+        """Grow ``rid``'s page table to hold ``n_tokens`` (lazy alloc)."""
+        assert n_tokens <= self.max_len, (rid, n_tokens, self.max_len)
+        t = self._tables.setdefault(rid, [])
+        while len(t) * self.page_size < n_tokens:
+            if not self._free:
+                raise MemoryError(
+                    f"out of KV pages growing request {rid} to "
+                    f"{n_tokens} tokens ({self.n_pages - 1} allocatable)")
+            t.append(self._free.pop())
+
+    def free(self, rid: int) -> None:
+        """Return a finished request's pages to the pool (stale contents
+        are never read: every consumer masks beyond its own context)."""
+        for p in self._tables.pop(rid, []):
+            self._free.append(p)
+
+    # ------------------------------------------------------------- views
+    def table_row(self, rid: int) -> np.ndarray:
+        """(pages_per_slot,) int32 page table, padded with reserved 0."""
+        row = np.zeros(self.pages_per_slot, np.int32)
+        t = self._tables.get(rid, ())
+        row[:len(t)] = t
+        return row
+
+    def table_array(self, rids) -> np.ndarray:
+        """(B, pages_per_slot) int32 slot table; ``rid < 0`` marks an
+        inactive slot (all reserved page 0)."""
+        rows = [self.table_row(r) if r >= 0 else
+                np.zeros(self.pages_per_slot, np.int32) for r in rids]
+        return np.stack(rows).astype(np.int32)

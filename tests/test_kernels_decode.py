@@ -1,11 +1,16 @@
-"""Flash-decode Pallas kernel vs oracle (GQA via BlockSpec index-mapping)."""
+"""Flash-decode Pallas kernel vs oracle (GQA via BlockSpec index-mapping),
+and the model decode path (``attn_decode`` under ``cfg.use_kernel``) vs the
+pure-jnp reference — scalar and per-batch positions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.decode_attention import (DEFAULT_BLOCK_KV,
+                                            decode_attention_kernel)
 from repro.kernels.ref import decode_attention_ref
+from repro.models import build_model
+from repro.models.common import ModelConfig
 
 pytestmark = pytest.mark.kernels
 
@@ -47,4 +52,104 @@ def test_decode_kernel_kv_len_traced():
         out = fn(q, k, v, jnp.int32(n))
         ref = decode_attention_ref(q, k, v, jnp.full((1,), n))
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_kernel_per_batch_kv_len():
+    """(B,) kv_len: a continuous-batching round mixes context depths; each
+    grid row reads ITS length from SMEM.  Row b must equal both the oracle
+    and its own single-row scalar-kv_len call."""
+    b, L, hq, hkv, hd = 3, 256, 4, 2, 32
+    q = _rand((b, 1, hq, hd), jnp.float32, 0)
+    k = _rand((b, L, hkv, hd), jnp.float32, 1)
+    v = _rand((b, L, hkv, hd), jnp.float32, 2)
+    kv_lens = jnp.asarray([200, 37, 256], jnp.int32)
+    out = decode_attention_kernel(q, k, v, kv_lens, blk_kv=64,
+                                  interpret=True)
+    rep = hq // hkv
+    ref = decode_attention_ref(q, jnp.repeat(k, rep, axis=2),
+                               jnp.repeat(v, rep, axis=2), kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    for i in range(b):
+        row = decode_attention_kernel(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                      jnp.int32(int(kv_lens[i])),
+                                      blk_kv=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(row[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# model decode path: attn_decode under cfg.use_kernel vs pure-jnp reference
+# ---------------------------------------------------------------------------
+def _tiny_cfg(hq: int, hkv: int, use_kernel: bool) -> ModelConfig:
+    return ModelConfig(name="t", family="dense", n_layers=2,
+                       d_model=16 * hq, n_heads=hq, n_kv_heads=hkv,
+                       d_ff=64, vocab_size=64, dtype=jnp.float32,
+                       remat=False, use_kernel=use_kernel)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (4, 1)])
+def test_decode_step_use_kernel_parity(hq, hkv):
+    """Satellite: ``model.decode_step`` routes attention through the flash
+    decode kernel under ``cfg.use_kernel``; logits must match the pure-jnp
+    reference across GQA ratios, at a ragged kv_len (cache length below
+    DEFAULT_BLOCK_KV, valid length not a multiple of the block)."""
+    max_len, plen = 64, 23                   # kv_len=24: ragged vs blk 64
+    m_ref = build_model(_tiny_cfg(hq, hkv, use_kernel=False))
+    m_ker = build_model(_tiny_cfg(hq, hkv, use_kernel=True))
+    params, _ = m_ref.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, plen), 0, 64)
+    logits, caches = m_ref.prefill(params, {"tokens": toks}, max_len)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    for pos in (plen, jnp.full((2,), plen, jnp.int32)):   # scalar + vector
+        lr, _ = m_ref.decode_step(params, caches, {"tokens": nxt}, pos)
+        lk, _ = m_ker.decode_step(params, caches, {"tokens": nxt}, pos)
+        np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_step_ragged_kv_len_beyond_default_block():
+    """kv_len not a multiple of DEFAULT_BLOCK_KV with a cache long enough
+    that the default block actually tiles it (multi-block sweep + masked
+    tail)."""
+    max_len = DEFAULT_BLOCK_KV + 128                      # 640: 2 blocks
+    plen = DEFAULT_BLOCK_KV + 89                          # kv_len 602
+    m_ref = build_model(_tiny_cfg(2, 1, use_kernel=False))
+    m_ker = build_model(_tiny_cfg(2, 1, use_kernel=True))
+    params, _ = m_ref.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, plen), 0, 64)
+    logits, caches = m_ref.prefill(params, {"tokens": toks}, max_len)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    lr, _ = m_ref.decode_step(params, caches, {"tokens": nxt}, plen)
+    lk, _ = m_ker.decode_step(params, caches, {"tokens": nxt}, plen)
+    assert (plen + 1) % DEFAULT_BLOCK_KV != 0
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lk),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_decode_step_vector_pos_matches_scalar_rows(use_kernel):
+    """A per-batch position vector (continuous-batching round) is
+    row-independent: slot i's logits equal a single-request scalar-pos
+    decode at its own depth."""
+    max_len, lens = 32, (9, 17)
+    model = build_model(_tiny_cfg(4, 2, use_kernel))
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rows, caches_rows, nxts = [], [], []
+    for i, plen in enumerate(lens):
+        toks = jax.random.randint(jax.random.PRNGKey(2 + i), (1, plen), 0, 64)
+        logits, caches = model.prefill(params, {"tokens": toks}, max_len)
+        caches_rows.append(caches)
+        nxts.append(int(jnp.argmax(logits[0, -1])))
+    # assemble the batched state: concat each cache leaf on the batch axis
+    batched = jax.tree_util.tree_map(
+        lambda *ls: jnp.concatenate(ls, axis=1), *caches_rows)
+    pos = jnp.asarray(lens, jnp.int32)
+    toks = jnp.asarray(nxts, jnp.int32)[:, None]
+    lb, _ = model.decode_step(params, batched, {"tokens": toks}, pos)
+    for i, plen in enumerate(lens):
+        ls, _ = model.decode_step(params, caches_rows[i],
+                                  {"tokens": toks[i:i + 1]}, plen)
+        np.testing.assert_allclose(np.asarray(lb[i]), np.asarray(ls[0]),
                                    rtol=2e-5, atol=2e-5)

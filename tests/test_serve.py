@@ -1,0 +1,252 @@
+"""Serving engine tests (ISSUE 7): continuous batching bit-identical to the
+sequential loop, eviction/re-admission off the paged cache, and the
+``streaming`` schedule's validate() over randomized request traces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedules import (ScheduleValidationError, decode_round,
+                                  prefill_unit, streaming)
+from repro.core.simulator import simulate_stream
+from repro.core import dp as dp_mod
+from repro.models import build_model
+from repro.models.common import ModelConfig
+from repro.serve import DecodeEngine, EngineConfig
+
+from _hyp import HAS_HYPOTHESIS, given, settings, st
+
+pytestmark = pytest.mark.serve
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  dtype=jnp.float32, remat=False)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = build_model(CFG)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts(seed, n, lo=3, hi=14):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, CFG.vocab_size,
+                        size=rng.randint(lo, hi)).tolist()
+            for _ in range(n)]
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=4, max_len=32, page_size=8, n_pages=20)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _sequential_tokens(model, params, prompts, gen, **kw):
+    """The reference: the SAME engine capped at one request in flight."""
+    eng = DecodeEngine(model, params, _ecfg(max_concurrency=1, **kw))
+    rids = [eng.submit(p, gen) for p in prompts]
+    eng.run()
+    return {r: eng.finished[r].generated for r in rids}, eng
+
+
+def test_continuous_matches_sequential_bit_identical(model_params):
+    """Acceptance: mixed prompt lengths + staggered admission (more
+    requests than slots, a tight page pool, and late submissions) produce
+    per-request tokens bit-identical to the sequential single-request
+    loop; the work trace validates as a streaming schedule."""
+    model, params = model_params
+    prompts = _prompts(1, 6)
+    gen = 5
+    seq, _ = _sequential_tokens(model, params, prompts, gen)
+
+    eng = DecodeEngine(model, params, _ecfg())
+    rids = [eng.submit(p, gen) for p in prompts[:4]]
+    # staggered admission: two more arrive only after a few rounds ran
+    for _ in range(3):
+        eng.step()
+    rids += [eng.submit(p, gen) for p in prompts[4:]]
+    eng.run()
+    assert eng.rounds < sum(len(seq[r]) for r in seq) + len(prompts)
+
+    for i, rid in enumerate(rids):
+        assert eng.finished[rid].generated == seq[i], f"request {i}"
+    sched = eng.schedule()
+    assert sched.validate(len(eng.units))
+    assert not sched.has_backward
+
+
+def test_single_request_degenerate_case(model_params):
+    """One request through the engine == the classic prefill+decode loop
+    (examples/serve_decode.py's engine path rests on this)."""
+    model, params = model_params
+    prompt = _prompts(2, 1)[0]
+    eng = DecodeEngine(model, params, _ecfg())
+    rid = eng.submit(prompt, 6)
+    eng.run()
+
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+        eng.cfg.max_len)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(5):
+        lg, caches = model.decode_step(
+            params, caches, {"tokens": jnp.asarray([[toks[-1]]], jnp.int32)},
+            pos)
+        toks.append(int(jnp.argmax(lg[0, -1])))
+        pos += 1
+    assert eng.finished[rid].generated == toks
+
+
+def test_eviction_readmission_resumes_from_paged_cache(model_params):
+    """Acceptance: preempting a mid-decode request frees its slot but
+    keeps its KV pages; on re-admission it continues decoding from the
+    paged cache — no new prefill units, tokens unchanged."""
+    model, params = model_params
+    prompts = _prompts(3, 3)
+    gen = 6
+    seq, _ = _sequential_tokens(model, params, prompts, gen)
+
+    eng = DecodeEngine(model, params, _ecfg())
+    rids = [eng.submit(p, gen) for p in prompts]
+    while not any(r.rid == rids[0] and r.prefilled and len(r.generated) >= 2
+                  for r in eng.running):
+        eng.step()
+    n_prefill_before = sum(1 for u in eng.units
+                           if u.kind == "prefill" and rids[0] in u.rids)
+    pages_before = eng.kv.capacity(rids[0])
+    eng.preempt(rids[0])
+    assert eng.kv.capacity(rids[0]) == pages_before  # pages kept
+    assert all(r.rid != rids[0] for r in eng.running)
+    eng.run()
+
+    n_prefill_after = sum(1 for u in eng.units
+                          if u.kind == "prefill" and rids[0] in u.rids)
+    assert n_prefill_after == n_prefill_before, "re-admission re-prefilled"
+    for i, rid in enumerate(rids):
+        assert eng.finished[rid].generated == seq[i]
+    assert eng.schedule().validate(len(eng.units))
+
+
+def test_slo_knob_bounds_prefill_stall(model_params):
+    """A tighter slo_tmax yields more, shorter prefill chunks; every
+    chunk's cost stays under the bound (dp.plan_prefill contract)."""
+    model, params = model_params
+    L, oh, slo = 24, 32.0, 150.0
+    cost = lambda l, c: oh + l * (c + l)
+    loose = DecodeEngine(model, params, _ecfg())           # slo_tmax=None
+    tight = DecodeEngine(model, params, _ecfg(slo_tmax=slo))
+    for e in (loose, tight):
+        e.submit(list(range(L)), 1)
+    assert loose.waiting[0].chunks == [L]                  # pure throughput
+    assert len(tight.waiting[0].chunks) > 1
+    ctx = 0
+    for l in tight.waiting[0].chunks:
+        assert cost(l, ctx) <= slo + 1e-9
+        ctx += l
+    assert sum(tight.waiting[0].chunks) == L
+    # infeasible SLO: best-effort plan, never a refusal
+    plan = dp_mod.plan_prefill(cost, L, 1, slo_tmax=1.0)
+    assert sum(plan.slices) == L
+
+
+def test_stream_trace_prices_ttft(model_params):
+    """simulate_stream on an engine trace: per-request TTFT is the exit of
+    its final prefill chunk, finish times are monotone in the trace, and
+    the total covers every tick."""
+    model, params = model_params
+    eng = DecodeEngine(model, params, _ecfg(n_ranks=2, slo_tmax=400.0))
+    rids = [eng.submit(p, 3) for p in _prompts(4, 3)]
+    eng.run()
+    rep = simulate_stream(eng.schedule(), lambda u: 1.0 + u.tokens)
+    assert set(rep.ttft) == set(rids)
+    for rid in rids:
+        assert 0 < rep.ttft[rid] <= rep.finish[rid] <= rep.total
+    assert rep.tokens == sum(u.tokens for u in eng.units)
+    assert rep.tokens_per_s > 0
+
+
+# ---------------------------------------------------------------------------
+# streaming-schedule validate(): randomized request traces
+# ---------------------------------------------------------------------------
+def _trace_from_plan(reqs):
+    """Build a VALID unit trace: round-robin one prefill chunk per round,
+    then token-synchronous decode rounds over whoever has prefilled."""
+    units, state = [], {}
+    for rid, (chunks, n_dec) in enumerate(reqs):
+        state[rid] = {"chunks": list(chunks), "ctx": 0, "dec": n_dec}
+    while True:
+        progressed = False
+        for rid, s in state.items():
+            if s["chunks"]:
+                l = s["chunks"].pop(0)
+                units.append(prefill_unit(rid, s["ctx"], l,
+                                          final=not s["chunks"]))
+                s["ctx"] += l
+                progressed = True
+                break
+        live = [rid for rid, s in state.items()
+                if not s["chunks"] and s["dec"] > 0]
+        if live:
+            units.append(decode_round(live,
+                                      [state[r]["ctx"] for r in live]))
+            for rid in live:
+                state[rid]["ctx"] += 1
+                state[rid]["dec"] -= 1
+            progressed = True
+        if not progressed:
+            return units
+
+
+@pytest.mark.skipif(not HAS_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=60, deadline=None)
+@given(st.lists(
+    st.tuples(st.lists(st.integers(1, 7), min_size=1, max_size=4),
+              st.integers(0, 6)),
+    min_size=1, max_size=5),
+    st.integers(1, 4))
+def test_streaming_validate_randomized_traces(reqs, K):
+    """Property: any trace of contiguous per-request chunk plans +
+    token-synchronous decode rounds validates; breaking contiguity,
+    decode-before-prefill, or chunk/duplicate shape raises."""
+    units = _trace_from_plan(reqs)
+    if not units:
+        return
+    sched = streaming(K, 4, tuple(units))
+    assert sched.validate(len(units))
+
+    # perturbations must be rejected
+    j, u = next(((j, u) for j, u in enumerate(units)
+                 if u.kind == "prefill"), (None, None))
+    if u is not None:
+        bad = list(units)
+        bad[j] = prefill_unit(u.rids[0], u.ctx[0] + 1, u.length, u.final)
+        with pytest.raises(ScheduleValidationError):
+            streaming(K, 4, tuple(bad)).validate(len(bad))
+    j = next((j for j, u in enumerate(units) if u.kind == "decode"), None)
+    if j is not None:
+        u = units[j]
+        bad = list(units)
+        bad[j] = decode_round(u.rids + (max(r for r, _ in enumerate(reqs))
+                                       + 99,), u.ctx + (0,))
+        with pytest.raises(ScheduleValidationError):
+            streaming(K, 4, tuple(bad)).validate(len(bad))
+
+
+def test_streaming_schedule_rejects_malformed_units():
+    with pytest.raises(ScheduleValidationError, match="exactly one"):
+        streaming(2, 4, (prefill_unit(0, 0, 2, False),
+                         # hand-built 2-request "prefill"
+                         type(prefill_unit(0, 0, 1))("prefill", (1, 2),
+                                                     (0, 0), 1, True),
+                         )).validate(2)
+    with pytest.raises(ScheduleValidationError, match="decodes before"):
+        streaming(2, 4, (decode_round([0], [0]),)).validate(1)
+    with pytest.raises(ScheduleValidationError, match="listed twice"):
+        streaming(2, 4, (prefill_unit(0, 0, 1),
+                         decode_round([0, 0], [1, 1]))).validate(2)
+    with pytest.raises(ScheduleValidationError, match="prefills after"):
+        streaming(2, 4, (prefill_unit(0, 0, 2),
+                         prefill_unit(0, 2, 1))).validate(2)
