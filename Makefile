@@ -1,7 +1,7 @@
 # Tier-1 verification and common dev entry points.
 PY ?= python
 
-.PHONY: test test-full test-kernels test-serve bench-dp bench-smoke dryrun-executors
+.PHONY: test test-full test-kernels test-serve lint-ir bench-dp bench-smoke dryrun-executors
 
 # tier-1 suite (the ROADMAP invocation, pinned here)
 test:
@@ -21,6 +21,13 @@ test-kernels:
 test-serve:
 	PYTHONPATH=src $(PY) -m pytest -q -m serve
 
+# static IR audit (repro.analysis): every registered schedule × use_kernel
+# on/off at K=2 — comm-safety, buffer, scale, donation, dtype and VMEM rules
+# over the real loss+grad traces; machine-readable report in
+# experiments/lint_ir.json, non-zero exit on any error finding
+lint-ir:
+	PYTHONPATH=src $(PY) -m repro.analysis --json experiments/lint_ir.json
+
 bench-dp:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only dp_bench
 
@@ -29,7 +36,8 @@ bench-dp:
 # interleaved-1f1b strictly beating plain 1f1b), the 1F1B-family compiled
 # peak-memory assertions (1f1b AND interleaved-1f1b flat in D vs
 # contiguous's growth), the fused-attention HBM-linearity assertions
-# (no quadratic score matrix / repeated-KV buffers in fwd or bwd jaxprs),
+# (no quadratic score matrix / repeated-KV buffers in fwd or bwd jaxprs,
+# via the repro.analysis rules, plus the analyzer's own self-assert cell),
 # and the serving assertion (continuous batching >= 2x sequential tokens/s
 # at batch 4 under Poisson arrivals)
 bench-smoke:

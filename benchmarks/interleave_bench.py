@@ -23,7 +23,6 @@ import os
 import subprocess
 import sys
 import textwrap
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
@@ -122,7 +121,6 @@ def bubble_part(emit):
 
 
 _TRACE_CODE = """
-    import time
     import jax, jax.numpy as jnp
     from repro.compat import make_mesh, use_mesh
     from repro.core.pipeline import TeraPipeConfig, make_terapipe_loss

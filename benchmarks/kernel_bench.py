@@ -13,7 +13,10 @@ check the ISSUE-4 memory claims on the ACTUAL compiled programs:
   in ctx+l (``compat.cost_analysis`` bytes accessed; the dense reference's
   score matrix would scale quadratically);
 * no intermediate in the jaxpr has an (l, ctx+l)-shaped score-matrix buffer
-  or a GQA-repeated (Sk, Hq) K/V buffer, in forward or backward.
+  or a GQA-repeated (Sk, Hq) K/V buffer, in forward or backward — via the
+  ``repro.analysis`` buffer rules (the walker lives there now, not here);
+* the analyzer itself has teeth: the same rule FIRES on the dense
+  reference's jaxpr (which really does materialize the score matrix).
 """
 import argparse
 import sys
@@ -26,6 +29,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import raise_on_errors, rules as arules
 from repro.compat import cost_analysis_dict
 from repro.kernels import ops as kops
 from repro.kernels.ref import terapipe_attention_ref
@@ -48,36 +52,16 @@ def _qkv(l, ctx, hq, hkv, hd=64, seed=0):
 
 
 # ---------------------------------------------------------------------------
-# memory-shape assertions
+# memory-shape assertions (via the repro.analysis buffer rules)
 # ---------------------------------------------------------------------------
-def _all_eqn_avals(jaxpr):
-    """Every intermediate aval in a (closed) jaxpr, recursing into sub-jaxprs
-    (scan/while/cond bodies — the interpret-mode kernels live there)."""
-    core = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
-    for eqn in core.eqns:
-        for var in eqn.outvars:
-            yield eqn.primitive.name, var.aval
-        for p in eqn.params.values():
-            for sub in (p if isinstance(p, (list, tuple)) else [p]):
-                if hasattr(sub, "jaxpr") or hasattr(sub, "eqns"):
-                    yield from _all_eqn_avals(sub)
-
-
 def _audit_jaxpr(fn, args, *, l, sk, hq, hkv, tag):
     """No (l, sk) score-matrix dims and no GQA-repeated (sk, hq) K/V dims
-    anywhere in the jaxpr of ``fn``."""
+    anywhere in the jaxpr of ``fn`` (rules: buffer.score-matrix,
+    buffer.repeated-kv)."""
     jaxpr = jax.make_jaxpr(fn)(*args)
-    for prim, aval in _all_eqn_avals(jaxpr):
-        shape = tuple(getattr(aval, "shape", ()))
-        for a, b in zip(shape, shape[1:]):
-            assert not (a == l and b == sk), (
-                f"{tag}: quadratic (l={l}, ctx+l={sk}) score-matrix buffer "
-                f"{shape} from `{prim}`")
-        if hkv != hq:
-            for a, b in zip(shape, shape[1:]):
-                assert not (a == sk and b == hq), (
-                    f"{tag}: GQA-repeated K/V buffer {shape} (Sk={sk}, "
-                    f"Hq={hq}) from `{prim}`")
+    findings = arules.check_score_matrix(jaxpr, l=l, sk=sk)
+    findings += arules.check_repeated_kv(jaxpr, sk=sk, hq=hq, hkv=hkv)
+    raise_on_errors(findings, context=tag)
 
 
 def _bytes_accessed(fn, args):
@@ -86,8 +70,25 @@ def _bytes_accessed(fn, args):
     return float(cost.get("bytes accessed", 0.0))
 
 
+def run_analyzer_self_assert(emit):
+    """The analyzer has teeth: the dense reference DOES materialize the
+    (l, ctx+l) score matrix, and buffer.score-matrix must flag it (a rule
+    regression would silently green-light every fused-kernel claim)."""
+    l, ctx, hq, hd = 64, 64, 4, 32
+    q, k, v = _qkv(l, ctx, hq, hq, hd)
+    jaxpr = jax.make_jaxpr(
+        lambda q, k, v: terapipe_attention_ref(q, k, v, ctx))(q, k, v)
+    findings = arules.check_score_matrix(jaxpr, l=l, sk=ctx + l)
+    fired = [f for f in findings if f.severity == "error"]
+    assert fired, ("buffer.score-matrix failed to fire on the dense "
+                   "reference — the analyzer lost its teeth")
+    emit("kernel/analysis_self_assert", 0.0,
+         f"rule={fired[0].rule} eqn={fired[0].eqn} n={len(fired)}")
+
+
 def run_asserts(emit):
     """Fused fwd and bwd, dense and GQA: linear HBM traffic + clean jaxprs."""
+    run_analyzer_self_assert(emit)
     l, hd = 128, 64
     for hq, hkv in ((4, 4), (8, 2)):
         tag = "dense" if hq == hkv else f"gqa{hq}/{hkv}"

@@ -1,6 +1,5 @@
 """The paper's Table 1 evaluation settings (verbatim)."""
 import dataclasses
-from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,7 +30,6 @@ import os
 import subprocess
 import sys
 import textwrap
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
@@ -63,7 +62,6 @@ def _compact(schedules: dict) -> dict:
             for name, cell in schedules.items()}
 
 _TRACE_CODE = """
-    import time
     import jax, jax.numpy as jnp
     from repro.compat import make_mesh, use_mesh
     from repro.core.pipeline import TeraPipeConfig, make_terapipe_value_and_grad

@@ -4,7 +4,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.compat import make_mesh, use_mesh
 from repro.configs import get_config

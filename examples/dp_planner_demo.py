@@ -12,8 +12,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.cost_model import (AnalyticCostModel, BilinearFitCostModel,
-                                   TPU_V5E, V100_AWS)
+from repro.core.cost_model import (AnalyticCostModel, BilinearFitCostModel, V100_AWS)
 from repro.core.dp import joint_batch_token, optimal_slicing
 from repro.core.schedule import SlicingScheme
 from repro.core.simulator import eq5_latency, simulate

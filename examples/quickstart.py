@@ -9,7 +9,6 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.cost_model import AnalyticCostModel, TPU_V5E

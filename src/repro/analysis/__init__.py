@@ -1,0 +1,21 @@
+"""repro.analysis: static jaxpr/HLO audit framework (ISSUE 8).
+
+A walking core (:mod:`.walker`), structured findings (:mod:`.findings`), a
+shared HLO-text layer (:mod:`.hlo`), and a name -> rule registry of audit
+passes (:mod:`.rules`) over six families — comm-safety, buffer, scale,
+donation, dtype, and Pallas VMEM.  :mod:`.audit` runs the rule matrix over
+every registered schedule; ``python -m repro.analysis`` (``make lint-ir``)
+is the CI entry point and emits machine-readable JSON.
+
+This package imports no heavy repro modules at top level — ``audit`` pulls
+in the executor lazily — so tests and benchmarks can use the walker and
+rules cheaply.
+"""
+from .findings import (AnalysisError, Finding, errors,  # noqa: F401
+                       format_findings, raise_on_errors)
+from .walker import (EqnSite, count_eqns, iter_eqn_avals,  # noqa: F401
+                     iter_eqns, subjaxprs)
+
+__all__ = ["AnalysisError", "EqnSite", "Finding", "count_eqns", "errors",
+           "format_findings", "iter_eqn_avals", "iter_eqns",
+           "raise_on_errors", "subjaxprs"]

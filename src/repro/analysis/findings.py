@@ -1,0 +1,59 @@
+"""Structured findings: what every analysis rule returns.
+
+A rule never asserts or prints — it returns a list of :class:`Finding`
+records (possibly empty) so the same rule can back a hard CI gate
+(:func:`raise_on_errors`), a pytest assertion, or the machine-readable JSON
+the ``python -m repro.analysis`` matrix emits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List
+
+SEV_ERROR = "error"
+SEV_WARNING = "warning"
+SEV_INFO = "info"
+
+
+@dataclasses.dataclass
+class Finding:
+    """One audit result.
+
+    ``rule`` is the registry id (``"comm.ppermute-permutation"``), ``eqn``
+    the offending primitive's name (empty for program-level findings),
+    ``path`` the sub-jaxpr path from :class:`~repro.analysis.walker.EqnSite`
+    and ``data`` rule-specific machine-readable detail.
+    """
+    rule: str
+    severity: str
+    message: str
+    eqn: str = ""
+    path: str = ""
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        loc = f" [{self.path or self.eqn}]" if (self.path or self.eqn) else ""
+        return f"{self.severity}:{self.rule}{loc}: {self.message}"
+
+
+def errors(findings: Iterable[Finding]) -> List[Finding]:
+    return [f for f in findings if f.severity == SEV_ERROR]
+
+
+def format_findings(findings: Iterable[Finding]) -> str:
+    return "\n".join(str(f) for f in findings)
+
+
+class AnalysisError(AssertionError):
+    """An audit found error-severity findings (AssertionError subclass so
+    benchmark/test call sites keep their assert semantics)."""
+
+
+def raise_on_errors(findings: Iterable[Finding], context: str = "") -> None:
+    errs = errors(findings)
+    if errs:
+        head = f"{context}: " if context else ""
+        raise AnalysisError(head + format_findings(errs))

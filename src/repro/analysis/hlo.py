@@ -1,0 +1,162 @@
+"""Shared HLO-text parsing layer.
+
+One home for the regex surface that both ``launch/hlo_tripcount`` (flops /
+bytes / collective accounting) and the analyzer's compiled-program audits
+(donation aliasing) read, so the brittle per-module copies are gone.
+
+Hardening over the original hlo_tripcount parsers (unit-tested in
+``tests/test_analysis.py``):
+
+* :func:`operand_refs` extracts the operand NAMES of an op line whether XLA
+  printed them typed (``dot(f32[8,16]{1,0} %lhs, f32[16,4]{1,0} %rhs)``),
+  bare-sigil (``dot(%lhs, %rhs)``), or sigil-less (``dot(lhs.1, rhs.2)``)
+  — and never strays past the call's closing paren into attribute refs
+  (``calls=%fused_computation``), which the old "first ``%ref`` anywhere"
+  scan could.
+* instruction-name suffixes (``%collective-permute.1`` for the second ring)
+  live on the NAME, not the opcode, so multi-ring programs keep their
+  per-opcode accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+# op definition: %name = type[shape]{layout} opcode(...), attrs
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\(?)([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
+    r"([\w\-]+)\((.*)$")
+COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->")
+TUPLE_TY = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*\((.*?)\)\s+([\w\-]+)\(")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    dtype: str
+    shape: Tuple[int, ...]
+    opcode: str
+    rest: str           # everything after the '('
+    is_tuple: bool = False
+
+
+def shape_bytes(dtype: str, shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Op]]:
+    """Computation name -> op list; ``"__entry__"`` aliases the ENTRY."""
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = OP_RE.match(line)
+        if m:
+            name, paren, dtype, dims, opcode, rest = m.groups()
+            shape = tuple(int(d) for d in dims.split(",") if d)
+            comps[cur].append(Op(name, dtype, shape, opcode, rest,
+                                 is_tuple=bool(paren)))
+        else:
+            m2 = TUPLE_TY.match(line)
+            if m2:
+                comps[cur].append(Op(m2.group(1), "tuple", (), m2.group(3),
+                                     line.split("(", 1)[-1], is_tuple=True))
+    comps["__entry__"] = comps.get(entry, [])
+    return comps
+
+
+_TYPE_PREFIX = re.compile(r"^\(?[a-z0-9]+\[[\d,]*\][^\s]*\s+")
+
+
+def operand_refs(rest: str) -> List[str]:
+    """Operand instruction names from the text after an op's opening paren.
+
+    Splits on top-level commas up to the call's closing paren, strips an
+    optional ``type[shape]{layout}`` prefix per operand, and accepts the
+    name with or without the ``%`` sigil."""
+    depth = 0
+    parts: List[str] = []
+    cur: List[str] = []
+    for ch in rest:
+        if ch == ")" and depth == 0:
+            break
+        if ch in "{[(":
+            depth += 1
+        elif ch in "}])":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+            continue
+        cur.append(ch)
+    parts.append("".join(cur))
+    refs = []
+    for p in parts:
+        p = _TYPE_PREFIX.sub("", p.strip())
+        m = re.match(r"^%?([\w\.\-]+)\s*$", p)
+        if m:
+            refs.append(m.group(1))
+    return refs
+
+
+@dataclasses.dataclass(frozen=True)
+class Alias:
+    """One entry of the module's ``input_output_alias`` map."""
+    output_index: Tuple[int, ...]
+    param_number: int
+    param_index: Tuple[int, ...]
+    kind: str           # "may-alias" | "must-alias"
+
+
+_ALIAS_ENTRY = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+)\s*(?:,\s*\{([\d,\s]*)\})?"
+    r"(?:,\s*([\w\-]+))?\)")
+
+
+def parse_input_output_aliases(hlo: str) -> List[Alias]:
+    """Donation results from the compiled module header: which output
+    tuple indices alias which entry parameters."""
+    key = "input_output_alias={"
+    start = hlo.find(key)
+    if start < 0:
+        return []
+    i = start + len(key)
+    depth = 1
+    while i < len(hlo) and depth:
+        if hlo[i] == "{":
+            depth += 1
+        elif hlo[i] == "}":
+            depth -= 1
+        i += 1
+    block = hlo[start + len(key):i - 1]
+
+    def _idx(s: Optional[str]) -> Tuple[int, ...]:
+        return tuple(int(d) for d in (s or "").replace(" ", "").split(",")
+                     if d)
+
+    return [Alias(_idx(m.group(1)), int(m.group(2)), _idx(m.group(3)),
+                  m.group(4) or "may-alias")
+            for m in _ALIAS_ENTRY.finditer(block)]

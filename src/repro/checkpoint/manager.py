@@ -23,7 +23,6 @@ from pathlib import Path
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 

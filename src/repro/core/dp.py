@@ -19,7 +19,6 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cost_model import CostModel
 
 
 @dataclasses.dataclass

@@ -112,9 +112,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
-from repro.core.schedules import (KIND_BWD_INPUT, KIND_BWD_WEIGHT, KIND_FWD,
-                                  REGISTRY, get_schedule, interleave_stacked,
-                                  schedule_names, uninterleave_stacked)
+from repro.core.schedules import (KIND_BWD_INPUT, KIND_BWD_WEIGHT, KIND_FWD, get_schedule, interleave_stacked, schedule_names, uninterleave_stacked)
 from repro.models import Model, build_model
 from repro.models.common import ModelConfig, rms_norm
 from repro.models.lm import _scan_full

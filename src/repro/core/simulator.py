@@ -60,7 +60,6 @@ import numpy as np
 
 import dataclasses
 
-from .cost_model import CostModel
 from .schedule import SlicingScheme
 from .schedules import (KIND_BWD, KIND_BWD_INPUT, KIND_BWD_WEIGHT, KIND_FWD,
                         REGISTRY, StageAssignment, StreamingSchedule,

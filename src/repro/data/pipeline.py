@@ -13,7 +13,6 @@ data-parallel rank can compute its own shard without coordination.
 from __future__ import annotations
 
 import dataclasses
-from pathlib import Path
 from typing import Dict, Iterator, Optional
 
 import numpy as np

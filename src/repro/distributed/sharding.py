@@ -12,7 +12,6 @@ Default GSPMD layout (DESIGN.md §4):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax

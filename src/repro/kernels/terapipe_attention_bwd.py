@@ -30,8 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .terapipe_attention import (DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q, NEG_INF,
-                                 align_block, _pad_seq)
+from .terapipe_attention import (DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q, align_block, _pad_seq)
 
 
 def _masked_p(q, k, lse, ctx, l, iq, ikv, blk_q, blk_kv, scale):

@@ -15,77 +15,22 @@ condition's integer constant), and accumulates:
   * collective bytes — per op type, ring-weighted (see hlo_analysis)
 
 All quantities are per-device (the partitioned module is per-device).
+
+The text-parsing layer (op grammar, operand-name extraction robust to
+typed/bare operand styles, dtype sizes) is shared with the static-audit
+framework — see :mod:`repro.analysis.hlo`.
 """
 from __future__ import annotations
 
-import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
-}
+from repro.analysis.hlo import (DTYPE_BYTES as _DTYPE_BYTES,  # noqa: F401
+                                Op, operand_refs, parse_computations,
+                                shape_bytes as _shape_bytes)
 
 _COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
               "all-to-all": 1.0, "collective-permute": 1.0}
-
-# op definition: %name = type[shape]{layout} opcode(...), attrs
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
-    r"(\(?)([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
-    r"([\w\-]+)\((.*)$")
-_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->")
-_TUPLE_TY = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*\((.*?)\)\s+([\w\-]+)\(")
-
-
-@dataclasses.dataclass
-class Op:
-    name: str
-    dtype: str
-    shape: Tuple[int, ...]
-    opcode: str
-    rest: str           # everything after the '('
-    is_tuple: bool = False
-
-
-def _shape_bytes(dtype: str, shape) -> int:
-    n = 1
-    for d in shape:
-        n *= d
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
-def parse_computations(hlo: str) -> Dict[str, List[Op]]:
-    comps: Dict[str, List[Op]] = {}
-    cur: Optional[str] = None
-    entry = None
-    for line in hlo.splitlines():
-        if cur is None:
-            m = _COMP_HDR.match(line.strip())
-            if m and line.rstrip().endswith("{"):
-                cur = m.group(2)
-                comps[cur] = []
-                if m.group(1):
-                    entry = cur
-            continue
-        if line.strip() == "}":
-            cur = None
-            continue
-        m = _OP_RE.match(line)
-        if m:
-            name, paren, dtype, dims, opcode, rest = m.groups()
-            shape = tuple(int(d) for d in dims.split(",") if d)
-            comps[cur].append(Op(name, dtype, shape, opcode, rest,
-                                 is_tuple=bool(paren)))
-        else:
-            m2 = _TUPLE_TY.match(line)
-            if m2:
-                comps[cur].append(Op(m2.group(1), "tuple", (), m2.group(3),
-                                     line.split("(", 1)[-1], is_tuple=True))
-    comps["__entry__"] = comps.get(entry, [])
-    return comps
 
 
 def _trip_count(cond_ops: List[Op], comps) -> int:
@@ -107,12 +52,13 @@ def _trip_count(cond_ops: List[Op], comps) -> int:
 
 
 def _dot_flops(op: Op, symtab: Dict[str, Tuple[str, Tuple[int, ...]]]) -> float:
-    # first operand ref; older XLA prints operands with their types
-    # ("dot(f32[8,16]{1,0} %lhs, ...)"), newer without ("dot(%lhs, ...)")
-    m = re.search(r"%([\w\.\-]+)", op.rest)
-    if not m:
-        return 0.0
-    lhs = symtab.get(m.group(1))
+    # first OPERAND name — operand_refs handles typed operands
+    # ("dot(f32[8,16]{1,0} %lhs, ...)"), bare-sigil ("dot(%lhs, ...)") and
+    # sigil-less ("dot(lhs.1, ...)") styles, and cannot stray into
+    # attribute refs after the closing paren (the old first-%ref-anywhere
+    # scan silently returned 0 flops on sigil-less dumps)
+    refs = operand_refs(op.rest)
+    lhs = symtab.get(refs[0]) if refs else None
     if lhs is None:
         return 0.0
     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
@@ -136,17 +82,8 @@ def analyze(hlo: str) -> Dict[str, float]:
     bytes_acc = 0.0
     coll = {k: 0.0 for k in _COLL_MULT}
 
-    fused_names = set()
-    for ops in comps.values():
-        for op in ops:
-            if op.opcode == "fusion":
-                for c in re.findall(r"calls=%([\w\.\-]+)", op.rest):
-                    fused_names.add(c)
-
     def symtab_of(ops):
         return {o.name: (o.dtype, o.shape) for o in ops}
-
-    visited_mults: Dict[str, float] = {}
 
     def walk(comp_name: str, mult: float, count_bytes: bool):
         ops = comps.get(comp_name, [])
@@ -156,13 +93,16 @@ def analyze(hlo: str) -> Dict[str, float]:
             if op.opcode == "dot":
                 flops += mult * _dot_flops(op, symtab)
             for cop in _COLL_MULT:
+                # opcode match: instruction-name suffixes for repeated
+                # collectives ("%collective-permute.1", the second ring)
+                # live on op.name, never the opcode
                 if op.opcode.startswith(cop) and not op.opcode.endswith("-done"):
                     if not op.is_tuple:
                         coll[cop] += mult * _shape_bytes(op.dtype, op.shape) \
                             * _COLL_MULT[cop]
                     else:
                         # tuple result (e.g. -start): charge operand sizes
-                        for ref in re.findall(r"%([\w\.\-]+)", op.rest)[:4]:
+                        for ref in operand_refs(op.rest):
                             if ref in symtab:
                                 dt, sh = symtab[ref]
                                 coll[cop] += mult * _shape_bytes(dt, sh) \
@@ -170,10 +110,8 @@ def analyze(hlo: str) -> Dict[str, float]:
                         break
             if count_bytes and op.opcode not in _SKIP_BYTES and not op.is_tuple:
                 sz = _shape_bytes(op.dtype, op.shape)
-                # operands only: refs before the call's closing paren
-                # (not control-predecessors / attribute refs)
-                operand_str = op.rest.split(")")[0]
-                for ref in re.findall(r"%([\w\.\-]+)", operand_str):
+                # operands only (not control-predecessors / attribute refs)
+                for ref in operand_refs(op.rest):
                     if ref in symtab:
                         dt, sh = symtab[ref]
                         sz += _shape_bytes(dt, sh)

@@ -5,8 +5,6 @@ jax device state (smoke tests must keep seeing 1 CPU device).
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
 from jax.sharding import Mesh
 
 from repro.compat import make_mesh

@@ -8,17 +8,17 @@ These are the functions the dry-run lowers and the trainer jits:
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import param_shardings, batch_shardings
+from repro.distributed.sharding import param_shardings
 from repro.models import Model
 from repro.models.common import set_activation_sharding
-from repro.optim.adamw import Optimizer, adamw, apply_updates, cosine_schedule
+from repro.optim.adamw import Optimizer, apply_updates
 
 
 def abstract_init(model: Model, seed: int = 0, param_dtype=None):

@@ -28,10 +28,8 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
@@ -42,7 +40,6 @@ from repro.core.schedules import (check_virtual_stages, schedule_help,
 from repro.data.pipeline import DataPipeline, SyntheticSource
 from repro.models import build_model
 from repro.optim.adamw import adamw, apply_updates, cosine_schedule
-from repro.launch.steps import make_train_step
 
 
 def build_value_and_grad(model, specs, mesh, args):

@@ -16,8 +16,6 @@ with a fully fused flash backward.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ splits the flattened block index range across pipeline stages.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +27,7 @@ from . import layers as layers_mod
 from . import moe as moe_mod
 from . import rglru as rglru_mod
 from . import ssm as ssm_mod
-from .common import (ModelConfig, constrain_acts, embed_init, rms_norm,
-                     softmax_xent)
+from .common import ModelConfig, constrain_acts, embed_init, rms_norm
 
 Params = Dict[str, Any]
 

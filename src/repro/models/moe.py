@@ -22,7 +22,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .common import ModelConfig, constrain_acts, dense_init, swiglu
+from .common import ModelConfig, dense_init, swiglu
 from .layers import ffn as dense_ffn, init_ffn
 
 

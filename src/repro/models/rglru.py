@@ -9,7 +9,7 @@ TeraPipe context cost term saturates at ``window`` (see DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ Shapes: x (B, L, H, P) heads×headdim; B/C (B, L, N) with ngroups=1; A (H,).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,7 @@ tests in the same module keep running."""
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings, strategies as st  # noqa: F401
     HAS_HYPOTHESIS = True
 except ImportError:
     HAS_HYPOTHESIS = False

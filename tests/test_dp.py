@@ -8,8 +8,7 @@ from repro.core.dp import (brute_force_slicing, joint_batch_token,
                            optimal_slicing, pad_slice_count)
 from repro.core.cost_model import (AnalyticCostModel, BilinearFitCostModel,
                                    TPU_V5E, V100_AWS)
-from repro.core.simulator import (_lockstep_loop, _lockstep_total,
-                                  bubble_fraction, eq5_latency, simulate)
+from repro.core.simulator import (_lockstep_loop, _lockstep_total, eq5_latency, simulate)
 from repro.core.schedule import SlicingScheme
 from repro.configs import get_config
 

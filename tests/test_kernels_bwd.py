@@ -93,6 +93,34 @@ def test_traced_ctx_matches_static():
                                        rtol=2e-4, atol=2e-4)
 
 
+def test_fused_vjp_jaxpr_clean_via_analyzer():
+    """The fused op's full vjp jaxpr passes the repro.analysis buffer rules
+    (no (l, ctx+l) score matrix, no GQA-repeated (Sk, Hq) K/V) and the
+    Pallas VMEM estimator sees all three kernels under the 16 MiB budget —
+    the same rules `make lint-ir` runs over the schedule matrix."""
+    from repro.analysis import errors, raise_on_errors
+    from repro.analysis.rules import (check_repeated_kv, check_score_matrix,
+                                      check_vmem)
+    l, ctx, hq, hkv, hd = 96, 160, 4, 1, 64
+    sk = ctx + l
+    q, k, v, g = _qkvg(1, l, ctx, hq, hkv, hd, jnp.float32)
+
+    def grads(q, k, v):
+        out, vjp = jax.vjp(
+            lambda q, k, v: ops.terapipe_attention(q, k, v, ctx_len=ctx),
+            q, k, v)
+        return vjp(g)
+
+    jaxpr = jax.make_jaxpr(grads)(q, k, v)
+    raise_on_errors(check_score_matrix(jaxpr, l=l, sk=sk)
+                    + check_repeated_kv(jaxpr, sk=sk, hq=hq, hkv=hkv),
+                    context="fused-vjp")
+    vmem = check_vmem(jaxpr)
+    kernels = {f.data["kernel"] for f in vmem}
+    assert not errors(vmem), vmem
+    assert {"_fwd_kernel", "_dq_kernel", "_dkv_kernel"} <= kernels, kernels
+
+
 def test_custom_vjp_closure_is_cached():
     """The custom_vjp wrapper is built once per static config (satellite:
     a per-call closure defeats jit caching and retraces every call)."""

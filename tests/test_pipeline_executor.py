@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis import count_eqns, raise_on_errors
+from repro.analysis.rules import check_flat_growth
+
 from test_system import _run_subprocess   # shared multi-device harness
 
 
@@ -293,28 +296,6 @@ def test_idle_ticks_leave_caches_bit_identical():
     assert "IDLE-TICK-CACHES-OK" in out
 
 
-def _count_eqns(jaxpr) -> int:
-    """Total equation count, recursing into sub-jaxprs (scan/cond/shard_map
-    bodies), so unrolled tick copies are visible."""
-    total = 0
-    for eqn in jaxpr.eqns:
-        total += 1
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                total += _count_eqns(sub)
-    return total
-
-
-def _subjaxprs(v):
-    if hasattr(v, "jaxpr"):          # ClosedJaxpr
-        yield v.jaxpr
-    elif hasattr(v, "eqns"):         # raw Jaxpr (e.g. shard_map body)
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for vv in v:
-            yield from _subjaxprs(vv)
-
-
 def _trace_loss(M: int, unroll: bool, virtual_stages: int = 1,
                 n_layers: int = 2):
     from repro.compat import make_mesh, use_mesh
@@ -342,12 +323,12 @@ def test_rolled_jaxpr_size_independent_of_M():
     """M=64 traces without unrolling 64 tick bodies: the rolled executor's
     jaxpr equation count is identical at M=4 and M=64 (the tick program is
     traced once; only the scan length changes)."""
-    n4 = _count_eqns(_trace_loss(4, unroll=False).jaxpr)
-    n64 = _count_eqns(_trace_loss(64, unroll=False).jaxpr)
+    n4 = count_eqns(_trace_loss(4, unroll=False).jaxpr)
+    n64 = count_eqns(_trace_loss(64, unroll=False).jaxpr)
     assert n64 <= n4 + 8, (n4, n64)    # O(1) in M (slack for reassembly)
     # sanity: the unrolled escape hatch DOES grow with M
-    u4 = _count_eqns(_trace_loss(4, unroll=True).jaxpr)
-    u8 = _count_eqns(_trace_loss(8, unroll=True).jaxpr)
+    u4 = count_eqns(_trace_loss(4, unroll=True).jaxpr)
+    u8 = count_eqns(_trace_loss(8, unroll=True).jaxpr)
     assert u8 > u4 + 4 and u4 > n4, (u4, u8, n4)
 
 
@@ -358,10 +339,10 @@ def test_rolled_jaxpr_size_independent_of_V():
     for every V — padding, not the schedule, is the only shape-dependence),
     and the whole V>1 machinery is a flat constant over the V=1 trace
     (~250 eqns of chunk gather/scatter + rank-major relayout)."""
-    n1 = _count_eqns(_trace_loss(4, unroll=False, n_layers=8).jaxpr)
-    n2 = _count_eqns(_trace_loss(4, unroll=False, n_layers=8,
+    n1 = count_eqns(_trace_loss(4, unroll=False, n_layers=8).jaxpr)
+    n2 = count_eqns(_trace_loss(4, unroll=False, n_layers=8,
                                  virtual_stages=2).jaxpr)
-    n8 = _count_eqns(_trace_loss(4, unroll=False, n_layers=8,
+    n8 = count_eqns(_trace_loss(4, unroll=False, n_layers=8,
                                  virtual_stages=8).jaxpr)
     assert n8 <= n2 + 8, (n2, n8)      # O(1) in V
     assert n2 <= n1 + 300, (n1, n2)    # chunk machinery = flat constant
@@ -397,15 +378,21 @@ def test_vg_jaxpr_size_independent_of_DMV_every_schedule():
     """ISSUE 5 acceptance: the traced loss+grad program of the ONE executor
     stays O(1) in D·M·V for every registered schedule — only the scan
     length and the (constant) gather tables change.  The explicit-bwd
-    schedules' per-unit-vjp tick must not re-trace per item either."""
+    schedules' per-unit-vjp tick must not re-trace per item either.
+    Enforced through the analyzer's scale.flat-growth rule (ISSUE 8): the
+    same pass `make lint-ir` runs over the registry matrix."""
     for sched, V in [("contiguous", 1), ("interleaved", 2), ("1f1b", 1),
                      ("interleaved-1f1b", 2), ("zb-h1", 1)]:
-        small = _count_eqns(_trace_vg(4, sched, V, D=1, n_layers=4).jaxpr)
-        bigM = _count_eqns(_trace_vg(32, sched, V, D=1, n_layers=4).jaxpr)
-        bigD = _count_eqns(_trace_vg(4, sched, V, D=4, n_layers=4).jaxpr)
-        assert bigM <= small + 8, (sched, small, bigM)
-        assert bigD <= small + 8, (sched, small, bigD)
+        small = _trace_vg(4, sched, V, D=1, n_layers=4)
+        raise_on_errors(
+            check_flat_growth(small, _trace_vg(32, sched, V, D=1,
+                                               n_layers=4),
+                              label=f"{sched} M 4->32")
+            + check_flat_growth(small, _trace_vg(4, sched, V, D=4,
+                                                 n_layers=4),
+                                label=f"{sched} D 1->4"), context=sched)
     # deeper interleaves of the explicit-bwd table are also flat
-    v2 = _count_eqns(_trace_vg(4, "interleaved-1f1b", 2, n_layers=4).jaxpr)
-    v4 = _count_eqns(_trace_vg(4, "interleaved-1f1b", 4, n_layers=4).jaxpr)
-    assert v4 <= v2 + 8, (v2, v4)
+    raise_on_errors(check_flat_growth(
+        _trace_vg(4, "interleaved-1f1b", 2, n_layers=4),
+        _trace_vg(4, "interleaved-1f1b", 4, n_layers=4),
+        label="interleaved-1f1b V 2->4"))

@@ -11,14 +11,11 @@ B's own rank for split-backward schedules.
 
 Degrades to SKIP (never a collection error) when hypothesis is not
 installed — see tests/_hyp.py."""
-import numpy as np
 import pytest
 
 from _hyp import HAS_HYPOTHESIS, given, settings, st  # noqa: F401
 
-from repro.core.schedules import (KIND_BWD, KIND_BWD_INPUT, KIND_BWD_WEIGHT,
-                                  KIND_FWD, REGISTRY, RETIRING_KINDS,
-                                  ScheduleValidationError, get_schedule)
+from repro.core.schedules import (KIND_BWD, KIND_BWD_INPUT, KIND_BWD_WEIGHT, KIND_FWD, REGISTRY, RETIRING_KINDS, get_schedule)
 
 KS = (1, 2, 3, 4, 8)
 VS = (1, 2, 3, 4)

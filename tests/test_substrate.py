@@ -1,5 +1,4 @@
 """Optimizer / data / checkpoint / compression substrate tests."""
-import os
 
 import jax
 import jax.numpy as jnp

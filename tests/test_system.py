@@ -9,7 +9,6 @@ from pathlib import Path
 
 import jax
 import numpy as np
-import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
